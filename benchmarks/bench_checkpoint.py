@@ -1,0 +1,62 @@
+"""Beyond-paper: ML train-state checkpoint throughput with the Hercule
+HProt flow — raw vs temporal-delta vs pyramid codecs, save + restore,
+plus the NCF file-count effect on a sharded state."""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.hercule.checkpoint import CheckpointManager
+
+from .common import emit, timeit
+
+
+def _state(mb: float = 32.0, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    n = int(mb * 1e6 / 4 / 4)
+    mk = lambda: jnp.asarray(rng.standard_normal((4, n)) * 1e-2, jnp.float32)
+    return {"params": {"w": mk()}, "mu": {"w": mk() * 0.1},
+            "nu": {"w": jnp.abs(mk()) * 1e-4}, "step": jnp.int32(1)}
+
+
+def run(mb: float = 32.0):
+    base = tempfile.mkdtemp(prefix="hx_ckpt_bench_")
+    try:
+        state = _state(mb)
+        state2 = jax.tree.map(
+            lambda x: x + 1e-5 if x.dtype.kind == "f" else x, state)
+        total_mb = sum(x.nbytes for x in jax.tree.leaves(state)) / 1e6
+        for mode in ("raw", "delta", "pyramid", "auto"):
+            root = os.path.join(base, mode)
+            mgr = CheckpointManager(root, ncf=4, mode=mode, async_write=False)
+            _, dt1 = timeit(lambda: mgr.save(1, state), reps=1)
+            _, dt2 = timeit(lambda: mgr.save(2, state2), reps=1)
+            nbytes = sum(
+                os.path.getsize(os.path.join(root, "data", f))
+                for f in os.listdir(os.path.join(root, "data")))
+            dev = jax.devices()[0]
+            template = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(
+                    jnp.shape(x), jnp.result_type(x),
+                    sharding=jax.sharding.SingleDeviceSharding(dev)), state)
+            (restored, _), dtr = timeit(lambda: mgr.restore(template, step=2),
+                                        reps=1)
+            ok = jax.tree.all(jax.tree.map(
+                lambda a, b: bool(jnp.array_equal(a, b)), restored, state2))
+            mgr.close()
+            emit(f"ckpt.save.{mode}", dt2 * 1e6,
+                 f"save1={total_mb/dt1:.0f}MB/s save2={total_mb/dt2:.0f}MB/s "
+                 f"stored={nbytes/1e6:.1f}MB of {2*total_mb:.0f}MB "
+                 f"ratio={nbytes/(2*total_mb*1e6):.3f} "
+                 f"restore={total_mb/dtr:.0f}MB/s bitwise={ok}")
+    finally:
+        shutil.rmtree(base, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    run()

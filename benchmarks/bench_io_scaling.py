@@ -1,0 +1,82 @@
+"""Paper fig. 7: strong-scaling write throughput, RAMSES-legacy
+one-file-per-process vs Hercule NCF aggregation, + file-count table.
+
+Scaled to the container (threads stand in for MPI ranks; /tmp stands in
+for Lustre — absolute GB/s is NOT comparable to the paper's 300 GB/s
+scratch, the *trend* and the file-count reduction are the reproduction).
+Writers within a contributor group serialize through the group's file
+(Hercule's aggregation semantics); distinct groups write concurrently
+(stripe_count=NCF analogue).
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from .common import emit
+
+
+def _legacy_write(root: str, n_writers: int, payload: bytes) -> float:
+    """One file per process (AMR file + heavier HYDRO file, like RAMSES)."""
+    os.makedirs(root, exist_ok=True)
+
+    def one(i):
+        for suffix, frac in (("amr", 0.25), ("hydro", 1.0)):
+            with open(os.path.join(root, f"out_{suffix}.{i:05d}"), "wb") as f:
+                f.write(payload[: int(len(payload) * frac)])
+                f.flush()
+                os.fsync(f.fileno())
+    t0 = time.perf_counter()
+    with cf.ThreadPoolExecutor(max_workers=min(16, n_writers)) as pool:
+        list(pool.map(one, range(n_writers)))
+    return time.perf_counter() - t0
+
+
+def _hercule_write(root: str, n_writers: int, ncf: int, payload: bytes) -> float:
+    from repro.hercule import HerculeDB
+    db = HerculeDB.create(root, kind="hprot", ncf=ncf)
+    ctx = db.begin_context(0)
+    groups = {}
+    for d in range(n_writers):
+        groups.setdefault(db.group_of(d), []).append(d)
+
+    def one(group_domains):
+        for d in group_domains:
+            ctx.write_bytes(d, "data", payload)
+    t0 = time.perf_counter()
+    with cf.ThreadPoolExecutor(max_workers=min(16, len(groups))) as pool:
+        list(pool.map(one, groups.values()))
+    ctx.finalize()
+    t = time.perf_counter() - t0
+    nf = db.n_files()
+    db.close()
+    return t, nf
+
+
+def run(writers=(16, 32, 64), mb_per_writer: float = 8.0):
+    payload = np.random.default_rng(0).bytes(int(mb_per_writer * 1e6))
+    base = tempfile.mkdtemp(prefix="hx_io_")
+    try:
+        for n in writers:
+            total_gb = n * 1.25 * mb_per_writer / 1e3  # legacy writes 1.25x
+            dt = _legacy_write(os.path.join(base, f"legacy{n}"), n, payload)
+            emit(f"fig7.io.legacy.n{n}", dt * 1e6,
+                 f"bw={total_gb/dt:.2f}GB/s files={2*n}")
+            for ncf in (4, 8, 16):
+                root = os.path.join(base, f"hx{n}_{ncf}")
+                (dt, nf) = _hercule_write(root, n, ncf, payload)
+                gb = n * mb_per_writer / 1e3
+                emit(f"fig7.io.hercule.n{n}.ncf{ncf}", dt * 1e6,
+                     f"bw={gb/dt:.2f}GB/s files={nf} "
+                     f"file_reduction={2*n/max(nf,1):.1f}x")
+    finally:
+        shutil.rmtree(base, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,31 @@
+"""Paper fig. 3: % of cells removed per domain by the tree pruning
+algorithm on Orion-like data (paper: avg 31.3 %, worst 17.2 %, best
+47.3 %)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import prune
+
+from .common import emit, orion_domains, timeit
+
+
+def run(n_domains: int = 16):
+    tree, locals_, pruned = orion_domains(n_domains)
+    fracs = [prune.removed_fraction(l, p) for l, p in zip(locals_, pruned)]
+    # time one prune pass on the largest domain
+    biggest = max(locals_, key=lambda t: t.n_nodes)
+    _, dt = timeit(prune.prune, biggest)
+    for d, f in enumerate(fracs):
+        emit(f"fig3.pruning.domain{d:02d}", dt * 1e6,
+             f"removed={f*100:.1f}%")
+    emit("fig3.pruning.summary", dt * 1e6,
+         f"avg={np.mean(fracs)*100:.1f}% worst={np.min(fracs)*100:.1f}% "
+         f"best={np.max(fracs)*100:.1f}% paper_avg=31.3% "
+         f"paper_worst=17.2% paper_best=47.3% "
+         f"global_nodes={tree.n_nodes}")
+    return fracs
+
+
+if __name__ == "__main__":
+    run()

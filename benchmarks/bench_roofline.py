@@ -1,0 +1,46 @@
+"""Deliverable (g): roofline table from the dry-run JSON artifacts.
+
+Reads dryrun_results/*.json (produced by ``python -m repro.launch.dryrun
+--all``) and emits one CSV row per (arch x shape x mesh) cell with the
+three terms, the dominant bottleneck, and the useful-flops ratio.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+RESULTS_DIR = os.environ.get("DRYRUN_RESULTS", "dryrun_results")
+
+
+def run():
+    files = sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json")))
+    if not files:
+        emit("roofline.missing", 0.0,
+             f"no dry-run artifacts in {RESULTS_DIR}; run "
+             "`python -m repro.launch.dryrun --all --mesh both`")
+        return
+    for path in files:
+        with open(path) as f:
+            d = json.load(f)
+        if d.get("mesh") != "single":
+            continue  # roofline table is single-pod per the assignment
+        name = f"roofline.{d['arch']}.{d['shape']}"
+        lb = d["step_time_lower_bound_s"]
+        emit(name, lb * 1e6,
+             f"compute={d['compute_s']*1e3:.2f}ms "
+             f"memory={d['memory_s']*1e3:.2f}ms "
+             f"collective={d['collective_s']*1e3:.2f}ms "
+             f"dominant={d['dominant'].replace('_s','')} "
+             f"useful_ratio={d.get('useful_flops_ratio', 0):.2f} "
+             f"mfu_bound={d.get('mfu_upper_bound', 0)*100:.1f}%")
+    n_multi = sum(1 for p in files if "__multi" in p)
+    n_single = sum(1 for p in files if "__single" in p)
+    emit("roofline.dryrun_coverage", 0.0,
+         f"single_pod_cells={n_single} multi_pod_cells={n_multi}")
+
+
+if __name__ == "__main__":
+    run()

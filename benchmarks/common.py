@@ -1,0 +1,39 @@
+"""Shared benchmark utilities: Orion-like dataset cache, CSV emission."""
+from __future__ import annotations
+
+import functools
+import time
+
+import numpy as np
+
+
+@functools.lru_cache(maxsize=2)
+def orion_domains(n_domains: int = 16, max_level: int = 8, seed: int = 7):
+    """(global tree, per-domain local trees, pruned trees) — cached."""
+    from repro.core import decompose, prune
+    from repro.sim import amrgen, fields
+    f = fields.orion(seed=seed)
+    tree = amrgen.generate_tree(f, min_level=3, max_level=max_level,
+                                threshold=1.0, level_factor=1.6)
+    dom = decompose.assign_domains(tree, n_domains)
+    idx = decompose._LevelIndex(tree)
+    locals_, pruned = [], []
+    for d in range(n_domains):
+        lt = decompose.local_tree(tree, dom, d, coarse_level=3, index=idx)
+        locals_.append(lt)
+        pruned.append(prune.prune(lt))
+    return tree, locals_, pruned
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timeit(fn, *args, reps: int = 3, **kw):
+    best = float("inf")
+    out = None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best

@@ -1,0 +1,56 @@
+"""Regenerate the EXPERIMENTS.md §Roofline markdown table from dry-run
+artifacts:  PYTHONPATH=src python -m benchmarks.make_roofline_table
+[baseline_dir] [optimized_dir]"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load(dirname):
+    out = {}
+    for p in glob.glob(os.path.join(dirname, "*.json")):
+        d = json.load(open(p))
+        out[(d["arch"], d["shape"], d["mesh"])] = d
+    return out
+
+
+def fmt_row(d, base=None):
+    def ms(x):
+        return f"{x*1e3:,.0f}"
+    delta = ""
+    if base is not None:
+        b = max(base["compute_s"], base["memory_s"], base["collective_s"])
+        n = max(d["compute_s"], d["memory_s"], d["collective_s"])
+        if b > 0 and abs(n / b - 1) > 0.02:
+            delta = f" ({b/n:.1f}x)"
+    return (f"| {d['arch']} | {d['shape']} | {ms(d['compute_s'])} | "
+            f"{ms(d['memory_s'])} | {ms(d['collective_s'])}{delta} | "
+            f"{d['dominant'].replace('_s', '')} | "
+            f"{d.get('useful_flops_ratio', 0):.2f} | "
+            f"{d.get('mfu_upper_bound', 0)*100:.1f}% | "
+            f"{(d['memory']['argument_bytes'] + d['memory']['temp_bytes'])/1e9:.1f} |")
+
+
+def main():
+    opt_dir = sys.argv[2] if len(sys.argv) > 2 else "dryrun_results"
+    base_dir = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results_baseline"
+    opt = load(opt_dir)
+    base = load(base_dir) if os.path.isdir(base_dir) else {}
+    print("| arch | shape | compute ms | memory ms | collective ms | "
+          "dominant | useful | MFU bound | HBM GB/dev |")
+    print("|---|---|---:|---:|---:|---|---:|---:|---:|")
+    for key in sorted(opt):
+        if key[2] != "single":
+            continue
+        print(fmt_row(opt[key], base.get(key)))
+    n_multi = sum(1 for k in opt if k[2] == "multi")
+    n_single = sum(1 for k in opt if k[2] == "single")
+    print(f"\nCells compiled: {n_single} single-pod (16x16) + "
+          f"{n_multi} multi-pod (2x16x16).")
+
+
+if __name__ == "__main__":
+    main()

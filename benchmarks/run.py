@@ -1,0 +1,31 @@
+"""Benchmark harness entry point: ``python -m benchmarks.run``.
+
+One function per paper table/figure (DESIGN.md §9). Output format:
+``name,us_per_call,derived`` CSV on stdout.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> int:
+    print("name,us_per_call,derived")
+    failures = []
+    from . import (bench_boolcodec, bench_checkpoint, bench_fpdelta,
+                   bench_io_scaling, bench_pruning, bench_roofline)
+    for mod in (bench_pruning, bench_boolcodec, bench_fpdelta,
+                bench_io_scaling, bench_checkpoint, bench_roofline):
+        try:
+            mod.run()
+        except Exception:  # noqa: BLE001
+            failures.append(mod.__name__)
+            traceback.print_exc()
+    if failures:
+        print(f"# FAILURES: {failures}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,187 @@
+"""Vectorized variable-length bit packing on uint32 words.
+
+TPU adaptation note (DESIGN.md §2): the paper's sequential CPU codec packs a
+variable-length bitstream byte by byte. On TPU there is no scalar path worth
+using, so packing is expressed as a cumsum + dual segment-sum over disjoint
+bit ranges — every lane writes its value's low/high word contribution and the
+(disjoint-bit) sum reassembles the stream. Works under jit with a static
+word-count upper bound, and on host with the exact count.
+
+All values are uint32; 64-bit payloads are handled by the callers as (hi, lo)
+uint32 pairs (TPU has no native int64 — see DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+UINT32_FULL = np.uint32(0xFFFFFFFF)
+
+
+def _mask(nbits: jnp.ndarray) -> jnp.ndarray:
+    """Bitmask with the low ``nbits`` set; nbits in [0, 32]."""
+    nbits = nbits.astype(jnp.uint32)
+    # (1 << 32) overflows, so split on the boundary.
+    safe = jnp.where(nbits >= 32, 0, nbits)
+    m = (jnp.uint32(1) << safe) - jnp.uint32(1)
+    return jnp.where(nbits >= 32, jnp.uint32(UINT32_FULL), m)
+
+
+def _shr(x: jnp.ndarray, n: jnp.ndarray) -> jnp.ndarray:
+    """Logical right shift that is well-defined for n in [0, 32]."""
+    n = n.astype(jnp.uint32)
+    safe = jnp.where(n >= 32, 0, n)
+    return jnp.where(n >= 32, jnp.uint32(0), (x >> safe))
+
+
+def _shl(x: jnp.ndarray, n: jnp.ndarray) -> jnp.ndarray:
+    """Left shift that is well-defined for n in [0, 32]."""
+    n = n.astype(jnp.uint32)
+    safe = jnp.where(n >= 32, 0, n)
+    return jnp.where(n >= 32, jnp.uint32(0), (x << safe))
+
+
+def pack_bits(values: jnp.ndarray, nbits: jnp.ndarray, num_words: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Pack ``values[i]``'s low ``nbits[i]`` bits densely into uint32 words.
+
+    Args:
+      values: (M,) uint32 payloads (only the low nbits are stored).
+      nbits:  (M,) int32 in [0, 32], bits to keep per value.
+      num_words: static output length (>= ceil(sum(nbits)/32)).
+
+    Returns:
+      (words, total_bits): (num_words,) uint32 and the scalar bit count.
+    """
+    values = values.astype(jnp.uint32)
+    nbits = nbits.astype(jnp.uint32)
+    offsets = jnp.cumsum(nbits) - nbits  # exclusive prefix
+    total_bits = jnp.sum(nbits)
+    word_idx = (offsets >> 5).astype(jnp.int32)
+    bit_in = (offsets & 31).astype(jnp.uint32)
+
+    masked = values & _mask(nbits)
+    lo = _shl(masked, bit_in)
+    hi = _shr(masked, jnp.uint32(32) - bit_in)  # 0 when bit_in == 0
+
+    words = jax.ops.segment_sum(lo, word_idx, num_segments=num_words)
+    words = words + jax.ops.segment_sum(hi, jnp.minimum(word_idx + 1, num_words - 1),
+                                        num_segments=num_words)
+    return words.astype(jnp.uint32), total_bits
+
+
+def unpack_bits(words: jnp.ndarray, offsets: jnp.ndarray, nbits: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`pack_bits` given per-value bit offsets.
+
+    Args:
+      words: (W,) uint32 stream.
+      offsets: (M,) exclusive bit offsets (cumsum(nbits) - nbits).
+      nbits: (M,) int in [0, 32].
+
+    Returns:
+      (M,) uint32 payloads (high bits zero).
+    """
+    offsets = offsets.astype(jnp.uint32)
+    nbits = nbits.astype(jnp.uint32)
+    word_idx = (offsets >> 5).astype(jnp.int32)
+    bit_in = offsets & 31
+    padded = jnp.concatenate([words.astype(jnp.uint32), jnp.zeros((1,), jnp.uint32)])
+    w0 = padded[word_idx]
+    w1 = padded[jnp.minimum(word_idx + 1, padded.shape[0] - 1)]
+    lo = _shr(w0, bit_in)
+    hi = _shl(w1, jnp.uint32(32) - bit_in)
+    hi = jnp.where(bit_in == 0, jnp.uint32(0), hi)
+    return (lo | hi) & _mask(nbits)
+
+
+# ---------------------------------------------------------------------------
+# Host-side convenience (exact sizing, numpy in/out).
+# ---------------------------------------------------------------------------
+
+def _next_pow2(n: int) -> int:
+    return 1 << (max(1, n) - 1).bit_length()
+
+
+_pack_jit = jax.jit(pack_bits, static_argnums=2)
+_unpack_jit = jax.jit(unpack_bits)
+
+
+def pack_bits_host(values: np.ndarray, nbits: np.ndarray) -> tuple[np.ndarray, int]:
+    """Host packing with exact output size. Returns (words, total_bits).
+
+    Shapes are bucketed to powers of two (zero-bit padding entries) so the
+    jit cache is hit across calls with varying sizes — without this, every
+    AMR level/domain would trigger a recompile.
+    """
+    nbits = np.asarray(nbits, np.int64)
+    m = int(nbits.shape[0])
+    total = int(nbits.sum())
+    mpad = _next_pow2(m)
+    vals_p = np.zeros(mpad, np.uint32)
+    vals_p[:m] = np.asarray(values, np.uint32)
+    nb_p = np.zeros(mpad, np.int32)
+    nb_p[:m] = nbits
+    num_words = _next_pow2(max(1, (total + 31) // 32))
+    words, _ = _pack_jit(jnp.asarray(vals_p), jnp.asarray(nb_p), num_words)
+    return np.asarray(words)[: max(1, (total + 31) // 32)].copy(), total
+
+
+def unpack_bits_host(words: np.ndarray, nbits: np.ndarray) -> np.ndarray:
+    nbits64 = np.asarray(nbits, np.int64)
+    m = int(nbits64.shape[0])
+    offsets = np.cumsum(nbits64) - nbits64
+    mpad = _next_pow2(m)
+    off_p = np.zeros(mpad, np.uint32)
+    off_p[:m] = offsets.astype(np.uint32)
+    nb_p = np.zeros(mpad, np.int32)
+    nb_p[:m] = nbits64
+    wpad = _next_pow2(int(np.asarray(words).shape[0]))
+    words_p = np.zeros(wpad, np.uint32)
+    words_p[: np.asarray(words).shape[0]] = np.asarray(words, np.uint32)
+    out = _unpack_jit(jnp.asarray(words_p), jnp.asarray(off_p),
+                      jnp.asarray(nb_p))
+    return np.asarray(out)[:m].copy()
+
+
+# ---------------------------------------------------------------------------
+# (hi, lo) pair helpers for 64-bit payloads.
+# ---------------------------------------------------------------------------
+
+def f64_to_pair(x: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """View float64 as (hi, lo) uint32 pair arrays (little-endian layout)."""
+    v = np.ascontiguousarray(x, np.float64).view(np.uint32).reshape(*x.shape, 2)
+    return v[..., 1].copy(), v[..., 0].copy()
+
+
+def pair_to_f64(hi: np.ndarray, lo: np.ndarray) -> np.ndarray:
+    out = np.empty((*hi.shape, 2), np.uint32)
+    out[..., 1] = hi
+    out[..., 0] = lo
+    return out.view(np.float64).reshape(hi.shape)
+
+
+def f32_to_u32(x: np.ndarray) -> np.ndarray:
+    return np.ascontiguousarray(x, np.float32).view(np.uint32)
+
+
+def u32_to_f32(x: np.ndarray) -> np.ndarray:
+    return np.ascontiguousarray(x, np.uint32).view(np.float32)
+
+
+def bf16_to_u32(x) -> np.ndarray:
+    """bfloat16 -> uint16 payload widened to uint32 (high 16 bits zero)."""
+    import ml_dtypes  # bundled with jax
+    a = np.ascontiguousarray(np.asarray(x, dtype=ml_dtypes.bfloat16))
+    return a.view(np.uint16).astype(np.uint32)
+
+
+def u32_to_bf16(x: np.ndarray):
+    import ml_dtypes
+    return np.ascontiguousarray(x, np.uint32).astype(np.uint16).view(ml_dtypes.bfloat16)
+
+
+@functools.lru_cache(maxsize=None)
+def _popcount_table():
+    return np.unpackbits(np.arange(256, dtype=np.uint8)[:, None], axis=1).sum(1)

@@ -1,0 +1,12 @@
+"""Hercule-style parallel I/O and data management (paper §2).
+
+Two database kinds, written at independent frequencies (fig. 1):
+
+  * :mod:`hprot`  — checkpoint/restart: raw, coarse-grained, code-private.
+  * :mod:`hdep`   — post-processing: self-describing, pruned, compressed.
+
+Shared machinery in :mod:`database`: *contexts* (one per time step /
+checkpoint step), *domains* (one per contributor), contributor groups of
+NCF processes sharing one physical file, and max-file-size rollover.
+"""
+from .database import HerculeDB, ContextWriter  # noqa: F401

@@ -1,0 +1,293 @@
+"""Hercule database: contexts, domains, contributor groups, file rollover.
+
+Layout (paper §2, "one file-for-multiple-processes"):
+
+    <root>/db.json                  database manifest (kind, ncf, limits)
+    <root>/data/g<G>_<F>.hrc        group G's F-th physical file; contexts
+                                    append until max_file_bytes -> rollover
+    <root>/ctx_<STEP>/MANIFEST.json per-context object index (atomic)
+
+A simulation with N contributors and NCF=P creates ceil(N/P) files per
+rollover generation — the paper's 16x file-count reduction at NCF=16.
+Record index entries carry (file, offset, nbytes, dtype, shape, codec,
+codec_meta), making every context self-describing: a reader needs nothing
+but this directory.
+
+Crash safety: data bytes are appended + flushed first, the context
+manifest is written to a temp file, fsync'd, then atomically renamed.
+A context without MANIFEST.json is invisible to readers.
+
+Concurrency model: one writer owns a group file at a time (Hercule's
+aggregation — the group leader writes for its contributors), so there is
+no shared-file locking; different groups write in parallel threads
+(`io_threads`), standing in for Lustre stripe_count = NCF (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import dataclasses
+import json
+import os
+import threading
+
+import numpy as np
+
+_DTYPES = {"bool": np.bool_}
+
+
+def _dtype_of(name: str):
+    if name == "bfloat16":
+        import ml_dtypes
+        return np.dtype(ml_dtypes.bfloat16)
+    return np.dtype(_DTYPES.get(name, name))
+
+
+@dataclasses.dataclass
+class Record:
+    name: str
+    domain: int
+    file: str
+    offset: int
+    nbytes: int
+    dtype: str
+    shape: tuple
+    codec: str = "raw"
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def to_json(self):
+        d = dataclasses.asdict(self)
+        d["shape"] = list(self.shape)
+        return d
+
+    @staticmethod
+    def from_json(d):
+        d = dict(d)
+        d["shape"] = tuple(d["shape"])
+        return Record(**d)
+
+
+class _GroupFiles:
+    """Append-only physical files of one contributor group, with rollover."""
+
+    def __init__(self, data_dir: str, group: int, max_file_bytes: int):
+        self.data_dir = data_dir
+        self.group = group
+        self.max_file_bytes = max_file_bytes
+        self.findex = -1
+        self.fh = None
+        self.offset = 0
+        self.lock = threading.Lock()
+        # resume after existing files
+        while os.path.exists(self._path(self.findex + 1)):
+            self.findex += 1
+        if self.findex >= 0:
+            self.offset = os.path.getsize(self._path(self.findex))
+
+    def _path(self, fi: int) -> str:
+        return os.path.join(self.data_dir, f"g{self.group:05d}_{fi:04d}.hrc")
+
+    def _ensure_open(self):
+        if self.fh is None or self.offset >= self.max_file_bytes:
+            if self.fh is not None:
+                self.fh.close()
+                self.fh = None
+            if self.findex < 0 or self.offset >= self.max_file_bytes:
+                self.findex += 1
+                self.offset = 0
+            self.fh = open(self._path(self.findex), "ab")
+            self.offset = self.fh.tell()
+
+    def append(self, payload: bytes) -> tuple[str, int]:
+        """Returns (file basename, offset)."""
+        with self.lock:
+            self._ensure_open()
+            off = self.offset
+            self.fh.write(payload)
+            self.offset += len(payload)
+            return os.path.basename(self._path(self.findex)), off
+
+    def flush(self):
+        with self.lock:
+            if self.fh is not None:
+                self.fh.flush()
+                os.fsync(self.fh.fileno())
+
+    def close(self):
+        with self.lock:
+            if self.fh is not None:
+                self.fh.close()
+                self.fh = None
+
+
+class HerculeDB:
+    """One Hercule database (HProt or HDep flavor via ``kind``)."""
+
+    def __init__(self, root: str, manifest: dict):
+        self.root = root
+        self.kind = manifest["kind"]
+        self.ncf = int(manifest["ncf"])
+        self.max_file_bytes = int(manifest["max_file_bytes"])
+        self.io_threads = int(manifest.get("io_threads", 4))
+        self._groups: dict[int, _GroupFiles] = {}
+        self._glock = threading.Lock()
+        os.makedirs(os.path.join(root, "data"), exist_ok=True)
+
+    # ------------------------------------------------------------- setup
+    @staticmethod
+    def create(root: str, *, kind: str = "hprot", ncf: int = 8,
+               max_file_bytes: int = 2 << 30, io_threads: int = 4,
+               exist_ok: bool = True) -> "HerculeDB":
+        assert kind in ("hprot", "hdep")
+        os.makedirs(root, exist_ok=exist_ok)
+        manifest = {"kind": kind, "ncf": ncf, "max_file_bytes": max_file_bytes,
+                    "io_threads": io_threads, "format_version": 1}
+        path = os.path.join(root, "db.json")
+        if not os.path.exists(path):
+            with open(path, "w") as f:
+                json.dump(manifest, f, indent=1)
+        return HerculeDB(root, manifest)
+
+    @staticmethod
+    def open(root: str) -> "HerculeDB":
+        with open(os.path.join(root, "db.json")) as f:
+            return HerculeDB(root, json.load(f))
+
+    # ------------------------------------------------------------ groups
+    def group_of(self, domain: int) -> int:
+        return domain // self.ncf
+
+    def _group_files(self, group: int) -> _GroupFiles:
+        with self._glock:
+            if group not in self._groups:
+                self._groups[group] = _GroupFiles(
+                    os.path.join(self.root, "data"), group, self.max_file_bytes)
+            return self._groups[group]
+
+    def n_files(self) -> int:
+        return len([f for f in os.listdir(os.path.join(self.root, "data"))
+                    if f.endswith(".hrc")])
+
+    # ---------------------------------------------------------- contexts
+    def begin_context(self, step: int) -> "ContextWriter":
+        return ContextWriter(self, step)
+
+    def contexts(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.root):
+            if d.startswith("ctx_") and os.path.exists(
+                    os.path.join(self.root, d, "MANIFEST.json")):
+                out.append(int(d[4:]))
+        return sorted(out)
+
+    def latest_context(self) -> int | None:
+        cs = self.contexts()
+        return cs[-1] if cs else None
+
+    def _ctx_dir(self, step: int) -> str:
+        return os.path.join(self.root, f"ctx_{step:08d}")
+
+    def load_index(self, step: int) -> dict:
+        with open(os.path.join(self._ctx_dir(step), "MANIFEST.json")) as f:
+            raw = json.load(f)
+        return {"step": raw["step"],
+                "attrs": raw.get("attrs", {}),
+                "records": [Record.from_json(r) for r in raw["records"]]}
+
+    # ------------------------------------------------------------ reading
+    def read_payload(self, rec: Record) -> bytes:
+        with open(os.path.join(self.root, "data", rec.file), "rb") as f:
+            f.seek(rec.offset)
+            return f.read(rec.nbytes)
+
+    def read(self, step: int, domain: int, name: str) -> np.ndarray:
+        idx = self.load_index(step)
+        for rec in idx["records"]:
+            if rec.domain == domain and rec.name == name:
+                return decode_record(self, rec)
+        raise KeyError(f"({domain}, {name}) not in context {step}")
+
+    def records(self, step: int, name: str | None = None,
+                domain: int | None = None) -> list[Record]:
+        idx = self.load_index(step)
+        return [r for r in idx["records"]
+                if (name is None or r.name == name)
+                and (domain is None or r.domain == domain)]
+
+    def close(self):
+        for g in self._groups.values():
+            g.close()
+
+
+class ContextWriter:
+    """Writer for one context; thread-safe across domains/groups."""
+
+    def __init__(self, db: HerculeDB, step: int):
+        self.db = db
+        self.step = step
+        self.records: list[Record] = []
+        self.attrs: dict = {}
+        self._lock = threading.Lock()
+        self._pool = cf.ThreadPoolExecutor(max_workers=db.io_threads,
+                                           thread_name_prefix="hercule-io")
+        self._futures: list[cf.Future] = []
+        os.makedirs(db._ctx_dir(step), exist_ok=True)
+
+    # ------------------------------------------------------------- write
+    def write_bytes(self, domain: int, name: str, payload: bytes, *,
+                    dtype: str = "uint8", shape: tuple | None = None,
+                    codec: str = "raw", meta: dict | None = None) -> None:
+        group = self.db.group_of(domain)
+        gf = self.db._group_files(group)
+        fname, off = gf.append(payload)
+        rec = Record(name=name, domain=domain, file=fname, offset=off,
+                     nbytes=len(payload), dtype=dtype,
+                     shape=tuple(shape if shape is not None else (len(payload),)),
+                     codec=codec, meta=meta or {})
+        with self._lock:
+            self.records.append(rec)
+
+    def write_array(self, domain: int, name: str, arr: np.ndarray, *,
+                    codec: str = "raw", meta: dict | None = None) -> None:
+        arr = np.ascontiguousarray(arr)
+        self.write_bytes(domain, name, arr.tobytes(), dtype=str(arr.dtype),
+                         shape=arr.shape, codec=codec, meta=meta)
+
+    def submit(self, fn, *args) -> None:
+        """Queue an I/O closure on the writer pool (parallel group writes)."""
+        self._futures.append(self._pool.submit(fn, *args))
+
+    # ---------------------------------------------------------- finalize
+    def finalize(self, attrs: dict | None = None) -> None:
+        for fut in self._futures:
+            fut.result()  # surfaces writer exceptions
+        self._pool.shutdown(wait=True)
+        for g in self.db._groups.values():
+            g.flush()
+        manifest = {"step": self.step, "attrs": {**self.attrs, **(attrs or {})},
+                    "records": [r.to_json() for r in self.records]}
+        path = os.path.join(self.db._ctx_dir(self.step), "MANIFEST.json")
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)  # atomic commit
+
+    def abort(self) -> None:
+        self._pool.shutdown(wait=False, cancel_futures=True)
+
+
+# ---------------------------------------------------------------- codecs
+
+def decode_record(db: HerculeDB, rec: Record) -> np.ndarray:
+    """Decode a record payload according to its codec (self-describing)."""
+    payload = db.read_payload(rec)
+    if rec.codec == "raw":
+        return np.frombuffer(payload, dtype=_dtype_of(rec.dtype)).reshape(rec.shape).copy()
+    if rec.codec == "boolrle":
+        from ..core import boolcodec
+        return boolcodec.decode(payload, n=int(np.prod(rec.shape))).reshape(rec.shape)
+    if rec.codec in ("fpdelta-pyramid", "fpdelta-delta"):
+        from . import codecs
+        return codecs.decode(db, rec, payload)
+    raise ValueError(f"unknown codec {rec.codec!r}")

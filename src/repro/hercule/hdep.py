@@ -1,0 +1,109 @@
+"""HDep post-processing database: self-describing AMR objects (paper §2).
+
+Each domain stores one *object* per context following the Hercule AMR-3D
+data model: the two boolean arrays (refinement, ownership — RLE/base-52
+compressed), level offsets, and the physical fields (father–son delta
+compressed, top-down decodable). Any reader can assemble the full AMR tree
+from the objects alone — nothing about the producing code is needed.
+
+The ML flavor (`write_analysis` / `read_analysis`) stores named tensors
+with the pyramid codec for weight/activation analysis dumps.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core import boolcodec, fpdelta, pyramid as pyr
+from ..core.amr import AMRTree
+from . import codecs
+from .database import HerculeDB
+
+
+# --------------------------------------------------------------- AMR flow
+
+def write_domain_tree(ctx, domain: int, tree: AMRTree, *,
+                      compress_fields: bool = True, zbits: int = 4) -> None:
+    """Write one domain's (pruned) AMR object into a context."""
+    ctx.write_bytes(domain, "amr/refine", boolcodec.encode(tree.refine),
+                    dtype="bool", shape=tree.refine.shape, codec="boolrle")
+    ctx.write_bytes(domain, "amr/owner", boolcodec.encode(tree.owner),
+                    dtype="bool", shape=tree.owner.shape, codec="boolrle")
+    ctx.write_array(domain, "amr/level_offsets", tree.level_offsets)
+    ctx.write_array(domain, "amr/coords0",
+                    tree.coords[tree.level_slice(0)].astype(np.int64))
+    for name, v in tree.fields.items():
+        if compress_fields:
+            tc = fpdelta.encode_tree_field(tree, name, zbits=zbits)
+            ctx.write_bytes(domain, f"amr/field/{name}",
+                            codecs.encode_tree_field(tc),
+                            dtype=str(v.dtype), shape=v.shape,
+                            codec="fpdelta-tree", meta={"width": tc.width})
+        else:
+            ctx.write_array(domain, f"amr/field/{name}", v)
+
+
+def read_domain_tree(db: HerculeDB, step: int, domain: int) -> AMRTree:
+    """Rebuild one domain's AMRTree from its self-describing object."""
+    refine = db.read(step, domain, "amr/refine").astype(bool)
+    owner = db.read(step, domain, "amr/owner").astype(bool)
+    offsets = db.read(step, domain, "amr/level_offsets").astype(np.int64)
+    coords0 = db.read(step, domain, "amr/coords0").astype(np.int64)
+    # reconstruct coords from the BFS structure (self-describing: children
+    # coords follow from fathers')
+    n = refine.shape[0]
+    coords = np.zeros((n, 3), np.int64)
+    coords[:coords0.shape[0]] = coords0
+    tree = AMRTree(refine=refine, owner=owner, level_offsets=offsets,
+                   coords=coords)
+    cs = tree.child_start()
+    from ..core.amr import CHILD_OFFSETS
+    for l in range(tree.n_levels - 1):
+        sl = tree.level_slice(l)
+        idx = np.flatnonzero(tree.refine[sl]) + sl.start
+        for k in range(8):
+            coords[cs[idx] + k] = 2 * coords[idx] + CHILD_OFFSETS[k]
+    # fields
+    for rec in db.records(step, domain=domain):
+        if not rec.name.startswith("amr/field/"):
+            continue
+        fname = rec.name[len("amr/field/"):]
+        payload = db.read_payload(rec)
+        if rec.codec == "fpdelta-tree":
+            tree.fields[fname] = codecs.decode_tree_field_bytes(
+                payload, tree, fname, int(rec.meta["width"]))
+        else:
+            tree.fields[fname] = np.frombuffer(
+                payload, dtype=rec.dtype).reshape(rec.shape).copy()
+    return tree
+
+
+def domains_in(db: HerculeDB, step: int) -> list[int]:
+    return sorted({r.domain for r in db.records(step)
+                   if r.name == "amr/refine"})
+
+
+# ---------------------------------------------------------------- ML flow
+
+def write_analysis(ctx, domain: int, tensors: dict[str, np.ndarray], *,
+                   compress: bool = True) -> None:
+    """Dump named tensors (weight stats, activations) for offline analysis."""
+    for name, arr in tensors.items():
+        arr = np.asarray(arr)
+        if compress and arr.dtype.kind == "f" and arr.size >= 64:
+            pc = pyr.encode_pyramid(arr)
+            payload = codecs.encode_pyramid(pc)
+            if len(payload) < arr.nbytes:
+                ctx.write_bytes(domain, f"analysis/{name}", payload,
+                                dtype=str(arr.dtype), shape=arr.shape,
+                                codec="fpdelta-pyramid", meta={"pad": pc.pad})
+                continue
+        ctx.write_array(domain, f"analysis/{name}", arr)
+
+
+def read_analysis(db: HerculeDB, step: int, domain: int = 0) -> dict[str, np.ndarray]:
+    out = {}
+    from .database import decode_record
+    for rec in db.records(step, domain=domain):
+        if rec.name.startswith("analysis/"):
+            out[rec.name[len("analysis/"):]] = decode_record(db, rec)
+    return out

@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: boolean <-> bitfield packing (paper §2.2 substrate).
+
+The boolean refinement/ownership arrays are compared against (and, before
+RLE, stored as) bitfields. Packing 32 boolean sublanes into one uint32 word
+per lane is a pure-VPU shift-and-accumulate over an (32, BW) VMEM tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_W = 1024
+
+
+def _pack_kernel(bits_ref, words_ref):
+    bits = bits_ref[...].astype(jnp.uint32)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, bits.shape, 0)
+    words_ref[...] = jnp.sum(bits << shifts, axis=0, keepdims=True,
+                             dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_w", "interpret"))
+def pack(bits: jnp.ndarray, *, block_w: int = DEFAULT_BLOCK_W,
+         interpret: bool = False) -> jnp.ndarray:
+    """(32, W) {0,1} uint32 -> (1, W) uint32 words; W padded to block_w."""
+    s, w = bits.shape
+    assert s == 32 and w % block_w == 0
+    grid = (w // block_w,)
+    return pl.pallas_call(
+        _pack_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((32, block_w), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, block_w), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, w), jnp.uint32),
+        interpret=interpret,
+    )(bits)
+
+
+def _unpack_kernel(words_ref, bits_ref):
+    words = words_ref[...]
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (32, words.shape[1]), 0)
+    bits_ref[...] = (jnp.broadcast_to(words, (32, words.shape[1])) >> shifts) & jnp.uint32(1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_w", "interpret"))
+def unpack(words: jnp.ndarray, *, block_w: int = DEFAULT_BLOCK_W,
+           interpret: bool = False) -> jnp.ndarray:
+    """(1, W) uint32 words -> (32, W) {0,1} uint32."""
+    _, w = words.shape
+    assert w % block_w == 0
+    grid = (w // block_w,)
+    return pl.pallas_call(
+        _unpack_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, block_w), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((32, block_w), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((32, w), jnp.uint32),
+        interpret=interpret,
+    )(words)

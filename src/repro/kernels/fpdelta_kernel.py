@@ -1,0 +1,114 @@
+"""Pallas TPU kernel for father–son XOR-delta encoding (paper §2.3).
+
+Hot loop of the codec: XOR each son with its predictor, OR-reduce the
+group, count shared leading zeros. The paper runs this sequentially on one
+core ("it could be trivially parallelized/vectorized using multiple seed of
+father cells values"); here *every father is a seed*: the group axis G maps
+to TPU lanes, the S=8 sons map to sublanes — one (8, BG) VMEM tile per
+grid step, all-VPU arithmetic, no MXU needed.
+
+CLZ is built from bit-smearing + SWAR popcount (Mosaic has no clz op);
+the pure-jnp oracle in ``ref.py`` uses the same formulation.
+
+Layout note: 64-bit payloads travel as (hi, lo) uint32 pairs — TPUs have
+no int64 (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Lane-dim block: multiple of 128 lanes; 8 sublanes = one int32 tile.
+DEFAULT_BLOCK_G = 1024
+
+
+def _clz32(x):
+    x = x | (x >> 1)
+    x = x | (x >> 2)
+    x = x | (x >> 4)
+    x = x | (x >> 8)
+    x = x | (x >> 16)
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    pop = (x * jnp.uint32(0x01010101)) >> 24
+    return (jnp.uint32(32) - pop).astype(jnp.int32)
+
+
+def _encode_kernel(pred_hi_ref, pred_lo_ref, son_hi_ref, son_lo_ref,
+                   res_hi_ref, res_lo_ref, nlz_ref, *, zbits: int, width: int):
+    res_hi = son_hi_ref[...] ^ pred_hi_ref[...]
+    res_lo = son_lo_ref[...] ^ pred_lo_ref[...]
+    res_hi_ref[...] = res_hi
+    res_lo_ref[...] = res_lo
+    # OR-reduce over the son (sublane) axis, keepdims for a (1, BG) store.
+    m_hi = jnp.bitwise_or.reduce(res_hi, axis=0, keepdims=True)
+    m_lo = jnp.bitwise_or.reduce(res_lo, axis=0, keepdims=True)
+    if width == 64:
+        nlz = jnp.where(m_hi != 0, _clz32(m_hi), 32 + _clz32(m_lo))
+    elif width == 32:
+        nlz = _clz32(m_lo)
+    else:  # 16-bit payload in the low word
+        nlz = _clz32(m_lo) - 16
+    nlz_ref[...] = jnp.minimum(nlz, (1 << zbits) - 1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("zbits", "width", "block_g", "interpret"))
+def encode_groups(pred_hi: jnp.ndarray, pred_lo: jnp.ndarray,
+                  son_hi: jnp.ndarray, son_lo: jnp.ndarray,
+                  *, zbits: int = 4, width: int = 64,
+                  block_g: int = DEFAULT_BLOCK_G, interpret: bool = False):
+    """Residues + clamped group leading-zero counts.
+
+    Args: (S, G) uint32 arrays (sons on sublanes, groups on lanes); G must
+    be padded to a multiple of ``block_g`` by the caller (ops.py does).
+    Returns (res_hi (S,G), res_lo (S,G), nlz (1,G) int32).
+    """
+    s, g = son_hi.shape
+    assert g % block_g == 0, f"G={g} not padded to {block_g}"
+    grid = (g // block_g,)
+    tile = pl.BlockSpec((s, block_g), lambda i: (0, i))
+    out_tile = pl.BlockSpec((1, block_g), lambda i: (0, i))
+    return pl.pallas_call(
+        functools.partial(_encode_kernel, zbits=zbits, width=width),
+        grid=grid,
+        in_specs=[tile, tile, tile, tile],
+        out_specs=[tile, tile, out_tile],
+        out_shape=[
+            jax.ShapeDtypeStruct((s, g), jnp.uint32),
+            jax.ShapeDtypeStruct((s, g), jnp.uint32),
+            jax.ShapeDtypeStruct((1, g), jnp.int32),
+        ],
+        interpret=interpret,
+    )(pred_hi, pred_lo, son_hi, son_lo)
+
+
+def _decode_kernel(res_hi_ref, res_lo_ref, pred_hi_ref, pred_lo_ref,
+                   son_hi_ref, son_lo_ref):
+    son_hi_ref[...] = res_hi_ref[...] ^ pred_hi_ref[...]
+    son_lo_ref[...] = res_lo_ref[...] ^ pred_lo_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_g", "interpret"))
+def decode_groups(res_hi: jnp.ndarray, res_lo: jnp.ndarray,
+                  pred_hi: jnp.ndarray, pred_lo: jnp.ndarray,
+                  *, block_g: int = DEFAULT_BLOCK_G, interpret: bool = False):
+    """XOR residues with predictors -> son bit patterns ((S, G) uint32)."""
+    s, g = res_hi.shape
+    assert g % block_g == 0
+    grid = (g // block_g,)
+    tile = pl.BlockSpec((s, block_g), lambda i: (0, i))
+    return pl.pallas_call(
+        _decode_kernel,
+        grid=grid,
+        in_specs=[tile, tile, tile, tile],
+        out_specs=[tile, tile],
+        out_shape=[
+            jax.ShapeDtypeStruct((s, g), jnp.uint32),
+            jax.ShapeDtypeStruct((s, g), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(res_hi, res_lo, pred_hi, pred_lo)

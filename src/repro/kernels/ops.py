@@ -1,0 +1,174 @@
+"""Public jit'd wrappers for the compression kernels.
+
+Backend selection: ``pallas`` on TPU, ``ref`` (pure jnp, same math) on CPU,
+``pallas_interpret`` for kernel-correctness tests. 64-bit payloads travel
+as (hi, lo) uint32 pairs; float32/bfloat16 get bitcast convenience entry
+points. ``compress_bits`` is the full jit'd encode pipeline (kernel ->
+cumsum -> segment-sum packing) used by the speed benchmarks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import bitstream as bs
+from . import bitpack_kernel, fpdelta_kernel, ref
+
+BLOCK_G = fpdelta_kernel.DEFAULT_BLOCK_G
+
+
+def default_backend() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _resolve(backend: str | None) -> str:
+    if backend in (None, "auto"):
+        return default_backend()
+    assert backend in ("pallas", "pallas_interpret", "ref"), backend
+    return backend
+
+
+def _pad_lanes(x: jnp.ndarray, mult: int, fill) -> jnp.ndarray:
+    g = x.shape[-1]
+    pad = (-g) % mult
+    if pad == 0:
+        return x
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)], constant_values=fill)
+
+
+def encode_groups_bits(pred_hi, pred_lo, son_hi, son_lo, *, zbits: int = 4,
+                       width: int = 64, backend: str | None = None):
+    """Residues + group nlz from (S, G) uint32 bit patterns.
+
+    Pads G internally to the kernel block; returns unpadded (S, G) residues
+    and (G,) nlz.
+    """
+    backend = _resolve(backend)
+    s, g = son_hi.shape
+    ph = _pad_lanes(jnp.asarray(pred_hi, jnp.uint32), BLOCK_G, 0)
+    plo = _pad_lanes(jnp.asarray(pred_lo, jnp.uint32), BLOCK_G, 0)
+    sh = _pad_lanes(jnp.asarray(son_hi, jnp.uint32), BLOCK_G, 0)
+    slo = _pad_lanes(jnp.asarray(son_lo, jnp.uint32), BLOCK_G, 0)
+    if backend == "ref":
+        res_hi, res_lo, nlz = ref.group_residues_ref(ph, plo, sh, slo, zbits, width)
+        nlz = nlz[None, :]
+    else:
+        res_hi, res_lo, nlz = fpdelta_kernel.encode_groups(
+            ph, plo, sh, slo, zbits=zbits, width=width,
+            interpret=(backend == "pallas_interpret"))
+    return res_hi[:, :g], res_lo[:, :g], nlz[0, :g] if nlz.ndim == 2 else nlz[:g]
+
+
+def decode_groups_bits(res_hi, res_lo, pred_hi, pred_lo, *,
+                       backend: str | None = None):
+    backend = _resolve(backend)
+    s, g = res_hi.shape
+    rh = _pad_lanes(jnp.asarray(res_hi, jnp.uint32), BLOCK_G, 0)
+    rl = _pad_lanes(jnp.asarray(res_lo, jnp.uint32), BLOCK_G, 0)
+    ph = _pad_lanes(jnp.asarray(pred_hi, jnp.uint32), BLOCK_G, 0)
+    plo = _pad_lanes(jnp.asarray(pred_lo, jnp.uint32), BLOCK_G, 0)
+    if backend == "ref":
+        sh, slo = ref.decode_residues_ref(rh, rl, ph, plo)
+    else:
+        sh, slo = fpdelta_kernel.decode_groups(
+            rh, rl, ph, plo, interpret=(backend == "pallas_interpret"))
+    return sh[:, :g], slo[:, :g]
+
+
+# --------------------------------------------------------- full pipelines
+
+@functools.partial(jax.jit, static_argnames=("zbits", "width", "backend"))
+def compress_bits(pred_hi, pred_lo, son_hi, son_lo, *, zbits: int = 4,
+                  width: int = 64, backend: str = "ref"):
+    """End-to-end jit'd encode: kernel -> pack codes & payload streams.
+
+    Inputs (S, G) uint32 (G already padded to the kernel block by caller).
+    Returns (code_words, payload_words, code_bits, payload_bits); the word
+    arrays are sized at their static upper bounds, callers truncate with
+    the bit counts.
+    """
+    s, g = son_hi.shape
+    if backend == "ref":
+        res_hi, res_lo, nlz = ref.group_residues_ref(
+            pred_hi, pred_lo, son_hi, son_lo, zbits, width)
+    else:
+        res_hi, res_lo, nlz = fpdelta_kernel.encode_groups(
+            pred_hi, pred_lo, son_hi, son_lo, zbits=zbits, width=width,
+            interpret=(backend == "pallas_interpret"))
+        nlz = nlz[0]
+    if nlz.ndim == 2:
+        nlz = nlz[0]
+    code_words, code_bits = bs.pack_bits(
+        nlz.astype(jnp.uint32), jnp.full((g,), zbits, jnp.int32),
+        num_words=max(1, (g * zbits + 31) // 32))
+    nbits = (width - nlz).astype(jnp.int32)
+    if width == 64:
+        # interleave (lo, hi) entries son-major: [lo00, hi00, lo10, hi10, ...]
+        nb = jnp.repeat(nbits[None, :], s, axis=0)            # (S, G)
+        lo_bits = jnp.minimum(nb, 32)
+        hi_bits = jnp.maximum(nb - 32, 0)
+        vals = jnp.stack([res_lo, res_hi], axis=1).reshape(2 * s, g)   # pairs per son
+        lens = jnp.stack([lo_bits, hi_bits], axis=1).reshape(2 * s, g)
+        # order: group-major then son-major then (lo,hi): transpose to (G, S*2)
+        vals = vals.T.reshape(-1)
+        lens = lens.T.reshape(-1)
+        max_words = max(1, (g * s * 64 + 31) // 32)
+    else:
+        nb = jnp.minimum(jnp.repeat(nbits[None, :], s, axis=0), width)
+        vals = res_lo.T.reshape(-1)
+        lens = nb.T.reshape(-1)
+        max_words = max(1, (g * s * width + 31) // 32)
+    payload_words, payload_bits = bs.pack_bits(vals, lens, num_words=max_words)
+    return code_words, payload_words, code_bits, payload_bits
+
+
+# ------------------------------------------------------------- bitfields
+
+def bitfield_pack(bits, *, backend: str | None = None) -> jnp.ndarray:
+    """(N,) {0,1} -> ceil(N/32) uint32 words (bit i of word w = bits[32w+i])."""
+    backend = _resolve(backend)
+    bits = jnp.asarray(bits).astype(jnp.uint32).reshape(-1)
+    n = bits.shape[0]
+    pad = (-n) % (32 * bitpack_kernel.DEFAULT_BLOCK_W)
+    bits = jnp.pad(bits, (0, pad))
+    arr = bits.reshape(-1, 32).T  # (32, W)
+    if backend == "ref":
+        words = ref.bitpack_ref(arr)[None, :]
+    else:
+        words = bitpack_kernel.pack(arr, interpret=(backend == "pallas_interpret"))
+    return words[0, : (n + 31) // 32]
+
+
+def bitfield_unpack(words, n: int, *, backend: str | None = None) -> jnp.ndarray:
+    backend = _resolve(backend)
+    words = jnp.asarray(words, jnp.uint32).reshape(-1)
+    pad = (-words.shape[0]) % bitpack_kernel.DEFAULT_BLOCK_W
+    words = jnp.pad(words, (0, pad))[None, :]
+    if backend == "ref":
+        bits = ref.bitunpack_ref(words[0])
+    else:
+        bits = bitpack_kernel.unpack(words, interpret=(backend == "pallas_interpret"))
+    return bits.T.reshape(-1)[:n]
+
+
+# -------------------------------------------------------- f32 conveniences
+
+def f32_bits(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.bitcast_convert_type(jnp.asarray(x, jnp.float32), jnp.uint32)
+
+
+def bits_f32(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.bitcast_convert_type(jnp.asarray(x, jnp.uint32), jnp.float32)
+
+
+def bf16_bits(x: jnp.ndarray) -> jnp.ndarray:
+    u16 = jax.lax.bitcast_convert_type(jnp.asarray(x, jnp.bfloat16), jnp.uint16)
+    return u16.astype(jnp.uint32)
+
+
+def bits_bf16(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.bitcast_convert_type(
+        jnp.asarray(x, jnp.uint32).astype(jnp.uint16), jnp.bfloat16)

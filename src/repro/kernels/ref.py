@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for the Pallas kernels (also the fast CPU path)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def clz32_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Count leading zeros of uint32 via bit-smear + SWAR popcount.
+
+    Identical to the kernel's formulation so both lower to the same ops on
+    TPU (Mosaic has no native clz; jax.lax.clz is avoided on purpose).
+    """
+    x = x.astype(jnp.uint32)
+    x = x | (x >> 1)
+    x = x | (x >> 2)
+    x = x | (x >> 4)
+    x = x | (x >> 8)
+    x = x | (x >> 16)
+    # SWAR popcount
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    pop = (x * jnp.uint32(0x01010101)) >> 24
+    return (jnp.uint32(32) - pop).astype(jnp.int32)
+
+
+def group_residues_ref(pred_hi, pred_lo, son_hi, son_lo, zbits: int, width: int):
+    """Oracle for the fpdelta encode kernel.
+
+    Layout is (S, G): sons down the sublane axis, groups across lanes
+    (TPU-native — see DESIGN.md §2). Returns res_hi, res_lo (S, G) and the
+    clamped shared-leading-zero count nlz (G,).
+    """
+    res_hi = son_hi ^ pred_hi
+    res_lo = son_lo ^ pred_lo
+    m_hi = jnp.bitwise_or.reduce(res_hi, axis=0)
+    m_lo = jnp.bitwise_or.reduce(res_lo, axis=0)
+    if width == 64:
+        nlz = jnp.where(m_hi != 0, clz32_ref(m_hi), 32 + clz32_ref(m_lo))
+    elif width == 32:
+        nlz = clz32_ref(m_lo)
+    else:
+        nlz = clz32_ref(m_lo) - 16
+    nlz = jnp.minimum(nlz, (1 << zbits) - 1).astype(jnp.int32)
+    return res_hi, res_lo, nlz
+
+
+def decode_residues_ref(res_hi, res_lo, pred_hi, pred_lo):
+    """Oracle for the fpdelta decode kernel (XOR with predictor)."""
+    return res_hi ^ pred_hi, res_lo ^ pred_lo
+
+
+def bitpack_ref(bits: jnp.ndarray) -> jnp.ndarray:
+    """Pack a (32, W) {0,1} uint32 array into (W,) uint32 words (bit b of
+    word w = bits[b, w]) — oracle for the bitpack kernel."""
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))[:, None]
+    return jnp.sum(bits.astype(jnp.uint32) * weights, axis=0,
+                   dtype=jnp.uint32)
+
+
+def bitunpack_ref(words: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`bitpack_ref`: (W,) uint32 -> (32, W) {0,1}."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)[:, None]
+    return ((words[None, :] >> shifts) & jnp.uint32(1)).astype(jnp.uint32)

@@ -1,0 +1,253 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the
+# device count at first init). Everything else follows.
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (arch x shape) cell, lower + compile the real step function
+(train_step / prefill / decode_step) against the production mesh with
+full shardings, print memory_analysis() + cost_analysis(), and persist
+roofline terms (deliverable g) to JSON.
+
+    python -m repro.launch.dryrun --arch internlm2_20b --shape train_4k
+    python -m repro.launch.dryrun --all --mesh both --out dryrun_results
+    python -m repro.launch.dryrun --all --jobs-as-subprocesses
+
+Compile failures here are bugs in the system (sharding mismatch, OOM at
+compile, unsupported collective).
+"""
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+
+import jax
+
+from .. import sharding as shlib
+from ..configs import SHAPES, get_config
+from ..configs.registry import ARCHS, cells
+from . import roofline as rl
+from .mesh import make_production_mesh
+from .rules import rules_for
+from .specs import build_callable, input_specs
+
+
+def _depth_variant(cfg, n_rep: int):
+    """Config with the layer-scan trip count set to ``n_rep`` (same body)."""
+    if cfg.block_pattern:
+        pat = len(cfg.block_pattern)
+        tail = cfg.n_layers % pat
+        return dataclasses.replace(cfg, n_layers=n_rep * pat + tail)
+    kw = {"n_layers": n_rep}
+    if cfg.family == "encdec":
+        kw["n_enc_layers"] = n_rep
+    return dataclasses.replace(cfg, **kw)
+
+
+def _trip_count(cfg) -> int:
+    if cfg.block_pattern:
+        return cfg.n_layers // len(cfg.block_pattern)
+    return cfg.n_layers
+
+
+def _cost_point(arch, shape, cfg, mesh, rules, n_dev):
+    """Compile one reduced config and return raw cost terms."""
+    kind, kwargs, axes = input_specs(arch, shape, cfg=cfg)
+    fn = build_callable(arch, shape, cfg=cfg)
+    in_sh = {k: shlib.tree_shardings(kwargs[k], axes[k], rules, mesh)
+             for k in kwargs}
+    kwargs = {k: jax.tree.map(
+                  lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                                     sharding=sh),
+                  kwargs[k], in_sh[k])
+              for k in kwargs}
+    with mesh:
+        with shlib.use_rules(rules, mesh):
+            compiled = jax.jit(fn).lower(**kwargs).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    coll = rl.collective_stats(compiled.as_text(), n_dev)
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll_s": coll["total_seconds"],
+            "coll_bytes": coll["total_bytes"]}
+
+
+def extrapolated_cost(arch: str, shape: str, cfg, mesh, rules, n_dev,
+                      kind: str) -> dict:
+    """Depth-extrapolated per-device cost (XLA counts loop bodies once).
+
+    Compile trip counts 2 and 4 with num_microbatches=1 (train uses the
+    true microbatch size), fit cost(t) = a + b*t, evaluate at the full
+    trip count, then scale train costs by num_microbatches (the grad-
+    accumulation scan is also counted once).
+    """
+    nmb = max(1, cfg.num_microbatches) if kind == "train" else 1
+    probe = dataclasses.replace(cfg, num_microbatches=1, unroll_layers=True)
+    t_full = _trip_count(cfg)
+    pts = {}
+    for t in (2, 4):
+        pcfg = _depth_variant(probe, t)
+        if kind == "train" and nmb > 1:
+            # lower the probe on the microbatch slice
+            orig = SHAPES[shape]["batch"]
+            SHAPES[shape]["batch"] = orig // nmb
+            try:
+                pts[t] = _cost_point(arch, shape, pcfg, mesh, rules, n_dev)
+            finally:
+                SHAPES[shape]["batch"] = orig
+        else:
+            pts[t] = _cost_point(arch, shape, pcfg, mesh, rules, n_dev)
+    out = {}
+    for key in ("flops", "bytes", "coll_s", "coll_bytes"):
+        slope = (pts[4][key] - pts[2][key]) / 2.0
+        base = pts[2][key] - 2.0 * slope
+        val = base + slope * t_full
+        out[key] = val * nmb
+    return out
+
+
+def model_flops(cfg, shape: str) -> float:
+    n = cfg.active_param_count()
+    cell = SHAPES[shape]
+    tokens = {"train": cell["batch"] * cell["seq"],
+              "prefill": cell["batch"] * cell["seq"],
+              "decode": cell["batch"]}[cell["kind"]]
+    mult = 6 if cell["kind"] == "train" else 2
+    return float(mult) * n * tokens
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, *,
+             rules_override: dict | None = None, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    rules = rules_for(arch, shape, multi_pod=multi_pod,
+                      override=rules_override)
+    kind, kwargs, axes = input_specs(arch, shape, cfg=cfg)
+    fn = build_callable(arch, shape, cfg=cfg)
+    in_sh = {k: shlib.tree_shardings(kwargs[k], axes[k], rules, mesh)
+             for k in kwargs}
+
+    # attach shardings to the abstract inputs; jit infers in_shardings from
+    # the avals. Donation: train donates the state, decode donates the cache.
+    kwargs = {k: jax.tree.map(
+                  lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                                     sharding=sh),
+                  kwargs[k], in_sh[k])
+              for k in kwargs}
+    donate = {"train": ("state",), "decode": ("cache",)}.get(kind, ())
+
+    t0 = time.time()
+    with mesh:
+        with shlib.use_rules(rules, mesh):
+            jitted = jax.jit(fn, donate_argnames=donate)
+            lowered = jitted.lower(**kwargs)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if verbose:
+        print(f"== {arch} x {shape} mesh={'2x16x16' if multi_pod else '16x16'} "
+              f"({kind}) lower {t_lower:.1f}s compile {t_compile:.1f}s")
+        print(f"   memory_analysis: {mem}")
+        flops = cost.get('flops', 0) if isinstance(cost, dict) else cost[0].get('flops', 0)
+        print(f"   cost_analysis: flops/device={flops:.3e} "
+              f"bytes/device={cost.get('bytes accessed', 0):.3e}")
+    terms = rl.roofline(compiled, n_dev, model_flops(cfg, shape))
+    # scan-aware correction: extrapolate costs over the layer trip count
+    extr = extrapolated_cost(arch, shape, cfg, mesh, rules, n_dev, kind)
+    terms["raw_loop_once"] = {k: terms[k] for k in
+                              ("flops_per_device", "bytes_per_device",
+                               "collective_s")}
+    terms["flops_per_device"] = extr["flops"]
+    terms["flops_global"] = extr["flops"] * n_dev
+    terms["bytes_per_device"] = extr["bytes"]
+    terms["compute_s"] = extr["flops"] / rl.PEAK_FLOPS
+    terms["memory_s"] = extr["bytes"] / rl.HBM_BW
+    terms["collective_s"] = extr["coll_s"]
+    terms["collective_bytes_per_device"] = extr["coll_bytes"]
+    terms["dominant"] = max(("compute_s", "memory_s", "collective_s"),
+                            key=lambda k: terms[k])
+    terms["step_time_lower_bound_s"] = max(
+        terms["compute_s"], terms["memory_s"], terms["collective_s"])
+    mf = model_flops(cfg, shape)
+    terms["model_flops"] = mf
+    terms["useful_flops_ratio"] = mf / terms["flops_global"] \
+        if terms["flops_global"] else 0.0
+    terms["mfu_upper_bound"] = mf / (n_dev * rl.PEAK_FLOPS *
+                                     terms["step_time_lower_bound_s"]) \
+        if terms["step_time_lower_bound_s"] else 0.0
+    terms.update(arch=arch, shape=shape, kind=kind,
+                 mesh="multi" if multi_pod else "single",
+                 lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+                 params=cfg.param_count(), active_params=cfg.active_param_count())
+    if verbose:
+        print(f"   roofline: compute {terms['compute_s']*1e3:.2f} ms | "
+              f"memory {terms['memory_s']*1e3:.2f} ms | "
+              f"collective {terms['collective_s']*1e3:.2f} ms "
+              f"-> dominant: {terms['dominant']}")
+    return terms
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", choices=ARCHS)
+    p.add_argument("--shape", choices=list(SHAPES))
+    p.add_argument("--mesh", choices=["single", "multi", "both"],
+                   default="single")
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--out", default="dryrun_results")
+    p.add_argument("--subprocesses", action="store_true",
+                   help="one subprocess per cell (isolates compile memory)")
+    args = p.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    if args.all:
+        todo = [(c["arch"], c["shape"]) for c in cells()]
+        failures = []
+        for arch, shape in todo:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+                out_file = os.path.join(args.out, tag + ".json")
+                if os.path.exists(out_file):
+                    print(f"skip {tag} (cached)")
+                    continue
+                if args.subprocesses:
+                    rc = subprocess.run(
+                        [sys.executable, "-m", "repro.launch.dryrun",
+                         "--arch", arch, "--shape", shape,
+                         "--mesh", "multi" if mp else "single",
+                         "--out", args.out]).returncode
+                    if rc != 0:
+                        failures.append(tag)
+                else:
+                    try:
+                        terms = run_cell(arch, shape, mp)
+                        with open(out_file, "w") as f:
+                            json.dump(terms, f, indent=1)
+                    except Exception as e:  # noqa: BLE001
+                        print(f"FAIL {tag}: {e}")
+                        failures.append(tag)
+        print(f"done; {len(failures)} failures: {failures}")
+        return 1 if failures else 0
+
+    assert args.arch and args.shape, "--arch/--shape or --all required"
+    for mp in meshes:
+        terms = run_cell(args.arch, args.shape, mp)
+        tag = f"{args.arch}__{args.shape}__{'multi' if mp else 'single'}"
+        with open(os.path.join(args.out, tag + ".json"), "w") as f:
+            json.dump(terms, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,35 @@
+"""Production meshes. A FUNCTION, not a module constant — importing this
+module never touches jax device state (required by the dry-run protocol).
+
+Single pod: (data=16, model=16) = 256 chips (v5e pod).
+Multi pod:  (pod=2, data=16, model=16) = 512 chips; the 'pod' axis folds
+into data-parallel batch by default (DCN-friendly). GPipe-style pipeline
+parallelism over 'pod' lives in :mod:`repro.launch.pipeline`
+(shard_map + ppermute; equivalence-tested in tests/test_pipeline.py).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    ndev = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) != ndev:
+        if len(devices) < ndev:
+            raise RuntimeError(
+                f"need {ndev} devices for mesh {shape}; have {len(devices)} "
+                "(dryrun.py must set XLA_FLAGS=--xla_force_host_platform_"
+                "device_count=512 before any jax import)")
+        devices = devices[:ndev]
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for CPU tests (requires forced host device count)."""
+    ndev = int(np.prod(shape))
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:ndev])

@@ -1,0 +1,100 @@
+"""GPipe-style pipeline parallelism over the 'pod' mesh axis.
+
+Between pods the links are DCN-class, so instead of folding `pod` into
+data parallel, the layer stack can be split into `pod`-many stages and
+microbatches streamed through with point-to-point `ppermute`s — the only
+inter-pod traffic becomes one activation tensor per microbatch per tick
+(vs gradient all-reduces in DP).
+
+Implementation: `shard_map` manual over 'pod' (other axes stay auto, so
+the per-stage body may itself be TP/FSDP-sharded). Schedule is the
+classic GPipe fill-compute-drain: `n_micro + n_stages - 1` ticks; stage s
+works on microbatch `t - s` at tick t (bubble fraction
+`(S-1)/(M+S-1)`).
+
+``gpipe_forward`` is generic over ``stage_fn(stage_params, x) -> x``; the
+dry-run demonstrates it on transformer blocks and
+``tests/test_pipeline.py`` proves tick-for-tick equivalence with the
+sequential forward.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def stack_stages(params_layers, n_stages: int):
+    """Split a stacked-layer pytree (leading dim L) into (n_stages, L/S, ...)."""
+    def split(x):
+        l = x.shape[0]
+        assert l % n_stages == 0, (l, n_stages)
+        return x.reshape(n_stages, l // n_stages, *x.shape[1:])
+    return jax.tree.map(split, params_layers)
+
+
+def gpipe_forward(stage_fn, stage_params, microbatches, *, mesh,
+                  axis: str = "pod"):
+    """Run microbatches through pod-sharded pipeline stages.
+
+    Args:
+      stage_fn: (params_one_stage, x) -> y, same x/y shape.
+      stage_params: pytree with leading dim n_stages (will be sharded over
+        ``axis``).
+      microbatches: (n_micro, mb, ...) inputs.
+      mesh: mesh containing ``axis``.
+
+    Returns (n_micro, mb, ...) outputs, replicated over ``axis``.
+    """
+    n_stages = mesh.shape[axis]
+    n_micro = microbatches.shape[0]
+    perm_fwd = [(i, i + 1) for i in range(n_stages - 1)]
+
+    def body(params_sharded, x_all):
+        # params_sharded: leading dim 1 (this pod's stage)
+        my_params = jax.tree.map(lambda p: p[0], params_sharded)
+        sid = jax.lax.axis_index(axis)
+        zero = jnp.zeros_like(x_all[0])
+
+        def tick(buf, t):
+            # stage 0 injects microbatch t; others consume the permuted buf
+            inject = x_all[jnp.clip(t, 0, n_micro - 1)]
+            xin = jnp.where(sid == 0, inject, buf)
+            y = stage_fn(my_params, xin)
+            # tick t at stage s works on microbatch t-s; only forward
+            # valid work (the bubble computes but emits nothing)
+            emit_t = t - (n_stages - 1)           # microbatch leaving the end
+            is_out = (sid == n_stages - 1) & (emit_t >= 0)
+            out = jnp.where(is_out, y, zero)
+            nxt = jax.lax.ppermute(y, axis, perm_fwd)
+            return nxt, (out, emit_t)
+
+        _, (outs, emit_ts) = jax.lax.scan(
+            tick, zero, jnp.arange(n_micro + n_stages - 1))
+        # keep the n_micro emitted outputs (ticks S-1 .. S-1+n_micro-1)
+        outs = outs[n_stages - 1:]
+        # broadcast results from the last stage to every pod (only the
+        # last stage emitted nonzero, so the sum selects it)
+        return jax.lax.psum(outs, axis)
+
+    pspec = jax.tree.map(lambda _: P(axis), stage_params)
+    fn = jax.shard_map(body, mesh=mesh,
+                       in_specs=(pspec, P()), out_specs=P(),
+                       check_vma=False)
+    return fn(stage_params, microbatches)
+
+
+def sequential_forward(stage_fn, stage_params, microbatches, n_stages: int):
+    """Reference: apply all stages in order (no pipelining)."""
+    def apply_all(x):
+        for s in range(n_stages):
+            params_s = jax.tree.map(lambda p: p[s], stage_params)
+            x = stage_fn(params_s, x)
+        return x
+    return jax.vmap(apply_all)(microbatches)
+
+
+def bubble_fraction(n_micro: int, n_stages: int) -> float:
+    return (n_stages - 1) / (n_micro + n_stages - 1)

@@ -1,0 +1,133 @@
+"""Roofline terms from a compiled dry-run artifact (deliverable g).
+
+No wall clock exists for TPUs in this container, so the three terms come
+from the compiled module itself:
+
+  compute_s    = HLO_FLOPs_global / (chips * 197e12)      [bf16 MXU peak]
+  memory_s     = HLO_bytes_global / (chips * 819e9)       [HBM BW]
+  collective_s = sum over collectives of ring-model time at 50 GB/s/link
+
+``compiled.cost_analysis()`` reports the *per-device* (post-SPMD) program;
+global = per-device x chips. Collective bytes are parsed from the
+optimized HLO text (per-device shapes). Ring-model factors: all-reduce
+moves 2(n-1)/n x bytes, all-gather/reduce-scatter (n-1)/n x bytes
+(output/input respectively), all-to-all (n-1)/n, collective-permute 1.
+"""
+from __future__ import annotations
+
+import re
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string like 'f32[128,256]' or a tuple thereof."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:  # iota format [ngroups,size]
+        return int(m.group(2))
+    return default
+
+
+def collective_stats(hlo_text: str, n_devices: int) -> dict:
+    """Per-device collective byte counts + ring-model seconds by op type."""
+    out = {k: {"bytes": 0, "count": 0, "seconds": 0.0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"%?[\w.\-]+ = (.+?) (all-reduce|all-gather|"
+                     r"reduce-scatter|all-to-all|collective-permute)"
+                     r"(-start|-done)?\(", s)
+        if not m:
+            continue
+        type_str, op, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":
+            continue  # counted at -start
+        nbytes = _shape_bytes(type_str)
+        n = _group_size(s, n_devices)
+        if op == "all-reduce":
+            secs = 2.0 * nbytes * (n - 1) / max(n, 1) / ICI_BW
+        elif op in ("all-gather", "all-to-all"):
+            secs = nbytes * (n - 1) / max(n, 1) / ICI_BW
+        elif op == "reduce-scatter":
+            secs = nbytes * (n - 1) / max(n, 1) / ICI_BW
+        else:  # collective-permute
+            secs = nbytes / ICI_BW
+        out[op]["bytes"] += nbytes
+        out[op]["count"] += 1
+        out[op]["seconds"] += secs
+    out["total_bytes"] = sum(v["bytes"] for v in out.values()
+                             if isinstance(v, dict))
+    out["total_seconds"] = sum(v["seconds"] for v in out.values()
+                               if isinstance(v, dict))
+    return out
+
+
+def roofline(compiled, n_devices: int, model_flops: float | None = None) -> dict:
+    """All three terms + bookkeeping from a compiled executable."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older API returns [dict]
+        cost = cost[0]
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo, n_devices)
+    mem = compiled.memory_analysis()
+    terms = {
+        "chips": n_devices,
+        "flops_per_device": flops_dev,
+        "flops_global": flops_dev * n_devices,
+        "bytes_per_device": bytes_dev,
+        "compute_s": flops_dev / PEAK_FLOPS,
+        "memory_s": bytes_dev / HBM_BW,
+        "collective_s": coll["total_seconds"],
+        "collective_bytes_per_device": coll["total_bytes"],
+        "collectives": {k: coll[k] for k in _COLLECTIVES},
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "peak_bytes": (getattr(mem, "argument_size_in_bytes", 0)
+                           + getattr(mem, "temp_size_in_bytes", 0)),
+        },
+    }
+    dominant = max(("compute_s", "memory_s", "collective_s"),
+                   key=lambda k: terms[k])
+    terms["dominant"] = dominant
+    terms["step_time_lower_bound_s"] = max(
+        terms["compute_s"], terms["memory_s"], terms["collective_s"])
+    if model_flops:
+        terms["model_flops"] = model_flops
+        terms["useful_flops_ratio"] = (model_flops / terms["flops_global"]
+                                       if terms["flops_global"] else 0.0)
+        terms["mfu_upper_bound"] = model_flops / (
+            n_devices * PEAK_FLOPS * terms["step_time_lower_bound_s"]) \
+            if terms["step_time_lower_bound_s"] else 0.0
+    return terms

@@ -1,0 +1,106 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every (arch x shape) cell.
+
+No device allocation anywhere — these drive ``jit(...).lower(**specs)``.
+Modality frontends are stubs per the assignment: [audio] supplies frame
+embeddings (B, n_frames, d_model); [vlm] supplies patch embeddings
+(B, n_patches, d_model).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import SHAPES, get_config
+from ..models import serving
+from ..models.transformer import LM
+from ..train import step as step_lib
+
+
+def _extras_specs(cfg, batch: int):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    out = {}
+    if cfg.family == "vlm":
+        out["patch_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_patches, cfg.d_model), cdt)
+    if cfg.family == "encdec":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_frames, cfg.d_model), cdt)
+    return out
+
+
+def _extras_axes(cfg):
+    out = {}
+    if cfg.family == "vlm":
+        out["patch_embeds"] = ("batch", "patches", "embed")
+    if cfg.family == "encdec":
+        out["frames"] = ("batch", "frames", "embed")
+    return out
+
+
+def input_specs(arch: str, shape: str, cfg=None):
+    """Abstract inputs for one dry-run cell.
+
+    Returns (kind, kwargs, axes) where kwargs feed ``lower(**kwargs)`` and
+    ``axes`` mirrors kwargs with logical-axis tuples for in_shardings.
+    """
+    cfg = cfg or get_config(arch)
+    lm = LM(cfg)
+    cell = SHAPES[shape]
+    b, s = cell["batch"], cell["seq"]
+    kind = cell["kind"]
+
+    if kind == "train":
+        state = step_lib.abstract_state(lm)
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                 **_extras_specs(cfg, b)}
+        batch_axes = {"tokens": ("batch", "seq"), "labels": ("batch", "seq"),
+                      **_extras_axes(cfg)}
+        return kind, {"state": state, "batch": batch}, \
+            {"state": step_lib.state_axes(lm), "batch": batch_axes}
+
+    params = lm.abstract_params()
+    p_axes = lm.param_axes()
+    if kind == "prefill":
+        kwargs = {"params": params,
+                  "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                  **_extras_specs(cfg, b)}
+        axes = {"params": p_axes, "tokens": ("batch", "seq"),
+                **_extras_axes(cfg)}
+        return kind, kwargs, axes
+
+    # decode: one new token against a seq_len-deep cache
+    cache, cache_axes = serving.cache_specs(lm, b, s)
+    kwargs = {"params": params,
+              "token": jax.ShapeDtypeStruct((b,), jnp.int32),
+              "pos": jax.ShapeDtypeStruct((), jnp.int32),
+              "cache": cache}
+    axes = {"params": p_axes, "token": ("batch",), "pos": (),
+            "cache": cache_axes}
+    return kind, kwargs, axes
+
+
+def build_callable(arch: str, shape: str, cfg=None):
+    """The function each cell lowers: train_step / prefill / decode_step."""
+    from ..train import optim
+    cfg = cfg or get_config(arch)
+    lm = LM(cfg)
+    kind = SHAPES[shape]["kind"]
+    cell = SHAPES[shape]
+
+    if kind == "train":
+        ts = step_lib.make_train_step(lm, optim.OptConfig())
+
+        def train_fn(state, batch):
+            return ts(state, batch)
+        return train_fn
+
+    if kind == "prefill":
+        def prefill_fn(params, tokens, **extras):
+            return serving.prefill(lm, params, tokens, extras=extras,
+                                   max_seq=cell["seq"])
+        return prefill_fn
+
+    def decode_fn(params, token, pos, cache):
+        return serving.decode_step(lm, params, token, pos, cache)
+    return decode_fn

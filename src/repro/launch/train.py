@@ -1,0 +1,54 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``
+
+Runs the real training loop (smoke-scale on CPU, production mesh when
+devices exist) with Hercule HProt checkpointing; resume is automatic.
+"""
+from __future__ import annotations
+
+import argparse
+
+from ..configs import ARCHS, get_config, get_smoke_config
+from ..data.pipeline import DataConfig
+from ..models.transformer import LM
+from ..train import optim
+from ..train.trainer import Trainer
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", choices=ARCHS, required=True)
+    p.add_argument("--smoke", action="store_true",
+                   help="reduced config (CPU-runnable)")
+    p.add_argument("--steps", type=int, default=100)
+    p.add_argument("--seq-len", type=int, default=256)
+    p.add_argument("--global-batch", type=int, default=8)
+    p.add_argument("--lr", type=float, default=3e-4)
+    p.add_argument("--ckpt-dir", default="/tmp/hx_ckpt")
+    p.add_argument("--ckpt-every", type=int, default=50)
+    p.add_argument("--ckpt-mode", default="raw",
+                   choices=["raw", "delta", "pyramid", "auto"])
+    p.add_argument("--ncf", type=int, default=8,
+                   help="Hercule contributors per file")
+    p.add_argument("--hdep-dir", default=None)
+    p.add_argument("--hdep-every", type=int, default=0)
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    lm = LM(cfg)
+    trainer = Trainer(
+        lm,
+        opt_cfg=optim.OptConfig(lr=args.lr, warmup_steps=max(1, args.steps // 10),
+                                stable_steps=args.steps, decay_steps=args.steps // 5 + 1),
+        data_cfg=DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                            global_batch=args.global_batch, seed=args.seed),
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+        ckpt_mode=args.ckpt_mode, ncf=args.ncf,
+        hdep_dir=args.hdep_dir, hdep_every=args.hdep_every,
+        seed=args.seed)
+    trainer.run(args.steps)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,139 @@
+"""Mixture-of-Experts FFN with grouped sort-based dispatch (EP).
+
+Token-choice top-k routing. Dispatch is *grouped*: tokens are split into
+``cfg.moe_groups`` groups whose leading dim rides the 'data' mesh axis, so
+the argsort / position-rank / scatter all stay LOCAL to a data shard (a
+global sort over sharded tokens forces all-gathers — measured 2x worse
+collectives, EXPERIMENTS.md §Perf i1). Capacity is per-group (standard in
+EP systems). The only cross-shard movement is the expert all-to-all that
+GSPMD inserts for the bucket resharding:
+
+  * E % model == 0 (granite, 32e): experts='model' -> block-diagonal EP,
+    one all-to-all of ~T*d bytes per layer.
+  * E % model != 0 (mixtral, 8e): experts replicated, expert_mlp='model'
+    -> Megatron TP inside each expert, all-reduce of the FFN output.
+
+Position-in-expert uses segment starts (O(T*k)), not a one-hot cumsum
+(O(T*k*E)).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .. import sharding
+from .layers import ParamSpec
+
+
+def moe_spec(cfg) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    gated = cfg.mlp_act in ("swiglu", "geglu")
+    spec = {
+        "router": ParamSpec((d, e), ("fsdp", None)),
+        "wi": ParamSpec((e, d, f), ("experts", "expert_in", "expert_mlp")),
+        "wo": ParamSpec((e, f, d), ("experts", "expert_mlp", "expert_in")),
+    }
+    if gated:
+        spec["wg"] = ParamSpec((e, d, f), ("experts", "expert_in", "expert_mlp"))
+    return spec
+
+
+def capacity(cfg, n_tokens: int) -> int:
+    c = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def moe_mlp(p, x, cfg):
+    """x: (B, S, D) -> (B, S, D), plus aux load-balancing loss (scalar)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    # group only when the token count is large: grouping exists to localize
+    # the big-T sort; at decode scale (T~batch) it just fragments capacity
+    # (measured 3x collective regression on mixtral decode_32k, §Perf i8)
+    g = math.gcd(getattr(cfg, "moe_groups", 1), t) if t >= 2048 else 1
+    tl = t // g                                   # tokens per group (local)
+    dt = x.dtype
+    xt = x.reshape(g, tl, d)
+    xt = sharding.constrain(xt, "batch", None, None)
+
+    logits = jnp.einsum("gtd,de->gte", xt, p["router"].astype(dt),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)          # (g, tl, k)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balancing loss (Switch-style), computed globally
+    me = probs.mean(axis=(0, 1))
+    ce = jnp.zeros((e,), jnp.float32).at[expert_ids.reshape(-1)].add(
+        1.0) / (t * k)
+    aux = e * jnp.sum(me * ce)
+
+    # ---- grouped sort-based dispatch. GATHER-only formulation: GSPMD
+    # replicates batched scatters (measured: 34 GB all-reduces of the
+    # dispatch tensors, §Perf i2), but partitions batched gathers fine.
+    flat_expert = expert_ids.reshape(g, tl * k)
+    flat_token = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(tl), k)[None], (g, tl * k))
+    flat_gate = gate_vals.reshape(g, tl * k)
+    order = jnp.argsort(flat_expert, axis=1)
+    sorted_expert = jnp.take_along_axis(flat_expert, order, axis=1)
+    sorted_token = jnp.take_along_axis(flat_token, order, axis=1)
+    sorted_gate = jnp.take_along_axis(flat_gate, order, axis=1)
+    # per-group segment starts: O(tl*k), no one-hot cumsum
+    seg_start = jax.vmap(
+        lambda se: jnp.searchsorted(se, jnp.arange(e), side="left"))(
+        sorted_expert)                                       # (g, E)
+    seg_end = jnp.concatenate(
+        [seg_start[:, 1:], jnp.full((g, 1), tl * k)], axis=1)
+    cap = capacity(cfg, tl)
+
+    # bucket slot (e, c) <- the c-th sorted assignment of expert e
+    pos = seg_start[:, :, None] + jnp.arange(cap)[None, None, :]  # (g,E,cap)
+    valid = pos < seg_end[:, :, None]
+    pos_c = jnp.clip(pos, 0, tl * k - 1).reshape(g, e * cap)
+    tok_for_slot = jnp.take_along_axis(sorted_token, pos_c, axis=1)
+    vals = jnp.take_along_axis(xt, tok_for_slot[..., None], axis=1)
+    be = (vals * valid.reshape(g, e * cap, 1).astype(dt)).reshape(g, e, cap, d)
+    be = sharding.constrain(be, "batch", "experts", "expert_cap", "expert_in")
+
+    # ---- expert FFN. 3D dots (e, g*cap, .) — group merged into capacity:
+    # CPU's DotThunk rejects 4D bf16 batched dots, and the 3D form shards
+    # identically (e->model or replicated, capacity->data).
+    from .layers import wcast
+    bem = be.transpose(1, 0, 2, 3).reshape(e, g * cap, d)
+    wi = wcast(p["wi"], dt, "experts", "expert_in", "expert_mlp")
+    h = jnp.einsum("ecd,edf->ecf", bem, wi,
+                   preferred_element_type=jnp.float32)
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        wg = wcast(p["wg"], dt, "experts", "expert_in", "expert_mlp")
+        gg = jnp.einsum("ecd,edf->ecf", bem, wg,
+                        preferred_element_type=jnp.float32)
+        act = jax.nn.silu(gg) if cfg.mlp_act == "swiglu" else jax.nn.gelu(gg)
+        h = act * h
+    else:
+        h = jnp.square(jax.nn.relu(h)) if cfg.mlp_act == "relu2" else jax.nn.gelu(h)
+    h = sharding.constrain(h.astype(dt), "experts", "expert_cap",
+                           "expert_mlp")
+    wo = wcast(p["wo"], dt, "experts", "expert_mlp", "expert_in")
+    out_m = jnp.einsum("ecf,efd->ecd", h, wo,
+                       preferred_element_type=jnp.float32).astype(dt)
+    out_e = out_m.reshape(e, g, cap, d).transpose(1, 0, 2, 3)
+    out_e = sharding.constrain(out_e, "batch", "experts", "expert_cap",
+                               "expert_in")
+    out_flat = out_e.reshape(g, e * cap, d)
+
+    # ---- combine: gather each assignment's slot output, un-sort via the
+    # inverse permutation, then sum the k contributions per token
+    pos_in_expert = (jnp.arange(tl * k)[None, :]
+                     - jnp.take_along_axis(seg_start, sorted_expert, axis=1))
+    keep = pos_in_expert < cap
+    slot = sorted_expert * cap + jnp.minimum(pos_in_expert, cap - 1)
+    contrib = jnp.take_along_axis(out_flat, slot[..., None], axis=1) \
+        * (sorted_gate * keep).astype(dt)[..., None]
+    inv = jnp.argsort(order, axis=1)
+    unsorted = jnp.take_along_axis(contrib, inv[..., None], axis=1)
+    yt = unsorted.reshape(g, tl, k, d).sum(axis=2)
+    return yt.reshape(b, s, d), aux

@@ -1,0 +1,91 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Gated linear recurrence:  a_t = exp(-c * softplus(Lambda) * r_t),
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t).
+Training uses ``lax.associative_scan`` over the (a, b) pairs (the
+recurrence is associative); decode is a single-step update. Combined with
+1:2-interleaved local attention in the hybrid transformer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ParamSpec
+
+_C = 8.0
+
+
+def rglru_spec(cfg) -> dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    return {
+        "in_x": ParamSpec((d, w), ("fsdp", "state")),
+        "in_gate": ParamSpec((d, w), ("fsdp", "state")),
+        "conv_w": ParamSpec((4, w), (None, "state"), scale=0.5),
+        "gate_r": ParamSpec((w, w), ("fsdp", "state")),
+        "gate_i": ParamSpec((w, w), ("fsdp", "state")),
+        "lam": ParamSpec((w,), ("state",), "zeros"),
+        "out": ParamSpec((w, d), ("state", "fsdp")),
+    }
+
+
+def _proj(x, w):
+    return jnp.einsum("...d,dk->...k", x, w.astype(x.dtype),
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def _gates(p, xw):
+    r = jax.nn.sigmoid(_proj(xw, p["gate_r"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(_proj(xw, p["gate_i"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = i * xw.astype(jnp.float32)
+    b = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12)) * gated
+    return a, b
+
+
+def _causal_conv(x, w, state=None):
+    k = w.shape[0]
+    pad = (jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+           if state is None else state.astype(x.dtype))
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i].astype(x.dtype) for i in range(k))
+    return out, xp[:, -(k - 1):, :]
+
+
+def rglru_block(p, x, cfg, cache=None, pos=None):
+    """x: (B, S, D) full-seq, or (B, 1, D) decode with cache
+    {"conv": (B,3,W), "h": (B,W)}. Returns (y, new_cache)."""
+    gate_in = jax.nn.gelu(_proj(x, p["in_gate"]).astype(jnp.float32))
+    xw = _proj(x, p["in_x"])
+
+    if cache is None:
+        xw, conv_state = _causal_conv(xw, p["conv_w"])
+        a, b = _gates(p, xw)
+
+        def combine(l, r):
+            return (l[0] * r[0], r[0] * l[1] + r[1])
+        a_sc, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+        y = (h * gate_in).astype(x.dtype)
+        new_cache = {"conv": conv_state, "h": h[:, -1].astype(jnp.float32)}
+    else:
+        xw, conv_state = _causal_conv(xw, p["conv_w"], cache["conv"])
+        a, b = _gates(p, xw)
+        h = a[:, 0] * cache["h"] + b[:, 0]
+        y = (h[:, None, :] * gate_in).astype(x.dtype)
+        new_cache = {"conv": conv_state, "h": h}
+    out = _proj(y, p["out"])
+    return out, new_cache
+
+
+def rglru_cache_spec(cfg, batch: int):
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, 3, w), jnp.dtype(cfg.compute_dtype)),
+        "h": jax.ShapeDtypeStruct((batch, w), jnp.float32),
+    }
+
+
+def rglru_cache_axes():
+    return {"conv": ("batch", None, "state"), "h": ("batch", "state")}

@@ -1,0 +1,297 @@
+"""Prefill and single-token decode with per-family caches.
+
+Caches are stacked along the layer axis and threaded through the layer
+scan as xs/ys, so decode compiles as one layer body regardless of depth.
+
+Cache shapes per family (C = cache capacity = min(window, max_seq)):
+  attn/moe : {"k","v": (L, B, C, nkv, hd)}
+  encdec   : + {"xk","xv": (L, B, F, nkv, hd)} (cross K/V, prefill-computed)
+  ssm      : {"conv": (L, B, K-1, DI), "state": (L, B, H, P, N)}
+  hybrid   : per-pattern-slot dicts stacked over macro blocks + tail.
+
+``decode_step(..)`` is the `serve_step` lowered in the decode/long dry-run
+cells; ``prefill(..)`` is the prefill cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import sharding
+from . import attention, layers, moe, rglru, ssm
+from .transformer import LM, maybe_scan
+
+
+def _cdt(cfg):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def cache_capacity(cfg, max_seq: int) -> int:
+    return min(cfg.window, max_seq) if cfg.window else max_seq
+
+
+# ----------------------------------------------------------------- specs
+
+def attn_cache_spec(cfg, batch: int, cap: int):
+    nkv, hd = cfg.n_kv_heads, cfg.hd
+    return {"k": jax.ShapeDtypeStruct((batch, cap, nkv, hd), _cdt(cfg)),
+            "v": jax.ShapeDtypeStruct((batch, cap, nkv, hd), _cdt(cfg))}
+
+
+def attn_cache_axes():
+    return {"k": ("batch", "kv_seq", "kv_heads", "head_dim"),
+            "v": ("batch", "kv_seq", "kv_heads", "head_dim")}
+
+
+def _stack_spec(spec, n):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n, *s.shape), s.dtype), spec)
+
+
+def _stack_axes(axes, n=None):
+    return jax.tree.map(lambda a: (None, *a), axes,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+def cache_specs(lm: LM, batch: int, max_seq: int):
+    """Abstract cache pytree + logical axes for a decode session."""
+    cfg = lm.cfg
+    cap = cache_capacity(cfg, max_seq)
+    if cfg.block_pattern:
+        per_block = {}
+        per_axes = {}
+        for i, k in enumerate(cfg.block_pattern):
+            if k == "rec":
+                per_block[f"sub{i}_rec"] = rglru.rglru_cache_spec(cfg, batch)
+                per_axes[f"sub{i}_rec"] = rglru.rglru_cache_axes()
+            else:
+                per_block[f"sub{i}_attn"] = attn_cache_spec(cfg, batch, cap)
+                per_axes[f"sub{i}_attn"] = attn_cache_axes()
+        spec = {"blocks": _stack_spec(per_block, lm.n_rep)}
+        axes = {"blocks": _stack_axes(per_axes)}
+        for i, k in enumerate(lm.tail_kinds):
+            if k == "rec":
+                spec[f"tail{i}"] = rglru.rglru_cache_spec(cfg, batch)
+                axes[f"tail{i}"] = rglru.rglru_cache_axes()
+            else:
+                spec[f"tail{i}"] = attn_cache_spec(cfg, batch, cap)
+                axes[f"tail{i}"] = attn_cache_axes()
+        return spec, axes
+    if cfg.family == "ssm":
+        return (_stack_spec(ssm.ssm_cache_spec(cfg, batch), cfg.n_layers),
+                _stack_axes(ssm.ssm_cache_axes()))
+    spec = _stack_spec(attn_cache_spec(cfg, batch, cap), cfg.n_layers)
+    axes = _stack_axes(attn_cache_axes())
+    if cfg.family == "encdec":
+        nkv, hd = cfg.n_kv_heads, cfg.hd
+        cross = {"xk": jax.ShapeDtypeStruct(
+                     (cfg.n_layers, batch, cfg.n_frames, nkv, hd), _cdt(cfg)),
+                 "xv": jax.ShapeDtypeStruct(
+                     (cfg.n_layers, batch, cfg.n_frames, nkv, hd), _cdt(cfg))}
+        spec = {**spec, **cross}
+        axes = {**axes,
+                "xk": (None, "batch", "frames", "kv_heads", "head_dim"),
+                "xv": (None, "batch", "frames", "kv_heads", "head_dim")}
+    return spec, axes
+
+
+def _seed_attn_cache(k, v, cap: int, window: int | None):
+    """(B,S,nkv,hd) prefill K/V -> (B,cap,nkv,hd) cache (ring for window)."""
+    b, s, nkv, hd = k.shape
+    if s == cap:
+        return k, v
+    if s > cap:  # windowed: keep last `cap`, placed at slot pos%cap
+        kw, vw = k[:, s - cap:], v[:, s - cap:]
+        roll = (s - cap) % cap
+        return jnp.roll(kw, roll, axis=1), jnp.roll(vw, roll, axis=1)
+    pad = [(0, 0), (0, cap - s), (0, 0), (0, 0)]
+    return jnp.pad(k, pad), jnp.pad(v, pad)
+
+
+# --------------------------------------------------------------- prefill
+
+def prefill(lm: LM, params, tokens, *, extras=None, max_seq: int):
+    """Process the prompt; returns (last-token logits, cache)."""
+    cfg = lm.cfg
+    extras = extras or {}
+    b, s = tokens.shape
+    cap = cache_capacity(cfg, max_seq)
+    x = layers.embed(params["embed"], tokens, cfg)
+    if cfg.family == "vlm" and "patch_embeds" in extras:
+        pe = extras["patch_embeds"].astype(x.dtype)
+        x = jnp.concatenate([pe, x[:, pe.shape[1]:, :]], axis=1)
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+
+    enc_out = enc_pos = None
+    if cfg.family == "encdec":
+        enc_out, enc_pos = lm._encode(params, extras["frames"])
+
+    if cfg.block_pattern:
+        x, cache = _prefill_hybrid(lm, params, x, positions, cap)
+    elif cfg.family == "ssm":
+        def body(h, lp):
+            h1 = layers.apply_norm(lp["ln1"], h, cfg)
+            y, c = ssm.ssm_block(lp["ssm"], h1, cfg)
+            return h + y, c
+        x, cache = maybe_scan(body, x, params["blocks"], unroll=cfg.unroll_layers)
+    else:
+        def body(h, lp):
+            h1 = layers.apply_norm(lp["ln1"], h, cfg)
+            att, (k, v) = attention.multihead(lp["attn"], h1, cfg=cfg,
+                                              positions=positions,
+                                              return_kv=True)
+            h = h + att
+            entry = dict(zip(("k", "v"), _seed_attn_cache(k, v, cap, cfg.window)))
+            if cfg.family == "encdec":
+                hx = layers.apply_norm(lp["lnx"], h, cfg)
+                xatt, (xk, xv) = attention.multihead(
+                    lp["xattn"], hx, cfg=cfg, positions=positions,
+                    kv_x=enc_out, kv_positions=enc_pos, causal=False,
+                    return_kv=True)
+                h = h + xatt
+                entry["xk"], entry["xv"] = xk, xv
+            h2 = layers.apply_norm(lp["ln2"], h, cfg)
+            if lm.kinds[0] == "moe":
+                y, _ = moe.moe_mlp(lp["moe"], h2, cfg)
+            else:
+                y = layers.mlp(lp["mlp"], h2, cfg)
+            return h + y, entry
+        x, cache = maybe_scan(body, x, params["blocks"], unroll=cfg.unroll_layers)
+
+    x = layers.apply_norm(params["final_norm"], x[:, -1:, :], cfg)
+    logits = layers.unembed(params["embed"], x, cfg)[:, 0]
+    return logits, cache
+
+
+def _prefill_hybrid(lm: LM, params, x, positions, cap):
+    cfg = lm.cfg
+
+    def body(h, lp):
+        caches = {}
+        for i, k in enumerate(cfg.block_pattern):
+            name = f"sub{i}_{k}"
+            h1 = layers.apply_norm(lp[name]["ln1"], h, cfg)
+            if k == "rec":
+                y, c = rglru.rglru_block(lp[name]["rec"], h1, cfg)
+                h = h + y
+                caches[name] = c
+            else:
+                att, (kk, vv) = attention.multihead(
+                    lp[name]["attn"], h1, cfg=cfg, positions=positions,
+                    return_kv=True)
+                h = h + att
+                caches[name] = dict(zip(("k", "v"),
+                                        _seed_attn_cache(kk, vv, cap, cfg.window)))
+            h2 = layers.apply_norm(lp[name]["ln2"], h, cfg)
+            h = h + layers.mlp(lp[name]["mlp"], h2, cfg)
+        return h, caches
+    x, blocks_cache = maybe_scan(body, x, params["blocks"], unroll=cfg.unroll_layers)
+    cache = {"blocks": blocks_cache}
+    for i, k in enumerate(lm.tail_kinds):
+        lp = params[f"tail{i}"]
+        h1 = layers.apply_norm(lp["ln1"], x, cfg)
+        if k == "rec":
+            y, c = rglru.rglru_block(lp["rec"], h1, cfg)
+            x = x + y
+            cache[f"tail{i}"] = c
+        else:
+            att, (kk, vv) = attention.multihead(lp["attn"], h1, cfg=cfg,
+                                                positions=positions,
+                                                return_kv=True)
+            x = x + att
+            cache[f"tail{i}"] = dict(zip(("k", "v"),
+                                         _seed_attn_cache(kk, vv, cap, cfg.window)))
+        h2 = layers.apply_norm(lp["ln2"], x, cfg)
+        x = x + layers.mlp(lp["mlp"], h2, cfg)
+    return x, cache
+
+
+# ---------------------------------------------------------------- decode
+
+def decode_step(lm: LM, params, token, pos, cache):
+    """One decode step. token: (B,), pos: () int32 -> (logits (B,V), cache)."""
+    cfg = lm.cfg
+    x = layers.embed(params["embed"], token[:, None], cfg)
+
+    if cfg.block_pattern:
+        return _decode_hybrid(lm, params, x, pos, cache)
+
+    if cfg.family == "ssm":
+        def body(h, inp):
+            lp, lc = inp
+            h1 = layers.apply_norm(lp["ln1"], h, cfg)
+            y, nc = ssm.ssm_block(lp["ssm"], h1, cfg, cache=lc)
+            return h + y, nc
+        x, new_cache = maybe_scan(body, x, (params["blocks"], cache), unroll=cfg.unroll_layers)
+    else:
+        def body(h, inp):
+            lp, lc = inp
+            h1 = layers.apply_norm(lp["ln1"], h, cfg)
+            att, nk, nv = attention.decode_kv(lp["attn"], h1, cfg=cfg,
+                                              cache_k=lc["k"], cache_v=lc["v"],
+                                              pos=pos)
+            h = h + att
+            entry = {"k": nk, "v": nv}
+            if cfg.family == "encdec":
+                hx = layers.apply_norm(lp["lnx"], h, cfg)
+                h = h + attention.decode_cross(lp["xattn"], hx, cfg=cfg,
+                                               enc_k=lc["xk"], enc_v=lc["xv"])
+                entry["xk"], entry["xv"] = lc["xk"], lc["xv"]
+            h2 = layers.apply_norm(lp["ln2"], h, cfg)
+            if lm.kinds[0] == "moe":
+                y, _ = moe.moe_mlp(lp["moe"], h2, cfg)
+            else:
+                y = layers.mlp(lp["mlp"], h2, cfg)
+            return h + y, entry
+        x, new_cache = maybe_scan(body, x, (params["blocks"], cache), unroll=cfg.unroll_layers)
+
+    x = layers.apply_norm(params["final_norm"], x, cfg)
+    logits = layers.unembed(params["embed"], x, cfg)[:, 0]
+    return logits, new_cache
+
+
+def _decode_hybrid(lm: LM, params, x, pos, cache):
+    cfg = lm.cfg
+
+    def body(h, inp):
+        lp, lc = inp
+        ncs = {}
+        for i, k in enumerate(cfg.block_pattern):
+            name = f"sub{i}_{k}"
+            h1 = layers.apply_norm(lp[name]["ln1"], h, cfg)
+            if k == "rec":
+                y, nc = rglru.rglru_block(lp[name]["rec"], h1, cfg,
+                                          cache=lc[name])
+                h = h + y
+            else:
+                y, nk, nv = attention.decode_kv(lp[name]["attn"], h1, cfg=cfg,
+                                                cache_k=lc[name]["k"],
+                                                cache_v=lc[name]["v"], pos=pos)
+                h = h + y
+                nc = {"k": nk, "v": nv}
+            ncs[name] = nc
+            h2 = layers.apply_norm(lp[name]["ln2"], h, cfg)
+            h = h + layers.mlp(lp[name]["mlp"], h2, cfg)
+        return h, ncs
+    x, blocks_cache = maybe_scan(body, x, (params["blocks"], cache["blocks"]),
+                                 unroll=cfg.unroll_layers)
+    new_cache = {"blocks": blocks_cache}
+    for i, k in enumerate(lm.tail_kinds):
+        lp = params[f"tail{i}"]
+        lc = cache[f"tail{i}"]
+        h1 = layers.apply_norm(lp["ln1"], x, cfg)
+        if k == "rec":
+            y, nc = rglru.rglru_block(lp["rec"], h1, cfg, cache=lc)
+        else:
+            y, nk, nv = attention.decode_kv(lp["attn"], h1, cfg=cfg,
+                                            cache_k=lc["k"], cache_v=lc["v"],
+                                            pos=pos)
+            nc = {"k": nk, "v": nv}
+        x = x + y
+        new_cache[f"tail{i}"] = nc
+        h2 = layers.apply_norm(lp["ln2"], x, cfg)
+        x = x + layers.mlp(lp["mlp"], h2, cfg)
+    x = layers.apply_norm(params["final_norm"], x, cfg)
+    logits = layers.unembed(params["embed"], x, cfg)[:, 0]
+    return logits, new_cache

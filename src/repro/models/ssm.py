@@ -1,0 +1,178 @@
+"""Mamba-2 (SSD, state-space duality) block — arXiv:2405.21060.
+
+Chunked SSD algorithm: within-chunk "attention-like" term via the decay
+matrix L, cross-chunk linear recurrence on the (H, P, N) state via
+``lax.scan``. Decode is the O(1) recurrent update — which is what makes the
+``long_500k`` cell tractable for this family (DESIGN.md §5).
+
+Layout: x (B, S, H, P) with H = d_inner/head_dim heads, P = head_dim,
+shared B/C of state size N (single group), scalar-per-head A.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import sharding
+from .layers import ParamSpec
+
+
+def ssm_spec(cfg) -> dict:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    return {
+        "in_x": ParamSpec((d, di), ("fsdp", "mlp")),
+        "in_z": ParamSpec((d, di), ("fsdp", "mlp")),
+        "in_b": ParamSpec((d, n), ("fsdp", "state")),
+        "in_c": ParamSpec((d, n), ("fsdp", "state")),
+        "in_dt": ParamSpec((d, h), ("fsdp", "heads")),
+        "dt_bias": ParamSpec((h,), ("heads",), "zeros"),
+        "a_log": ParamSpec((h,), ("heads",), "zeros"),
+        "d_skip": ParamSpec((h,), ("heads",), "ones"),
+        "conv_w": ParamSpec((cfg.ssm_conv, di), (None, "mlp"), scale=0.5),
+        "norm_scale": ParamSpec((di,), ("mlp",), "zeros"),
+        "out": ParamSpec((di, d), ("mlp", "fsdp")),
+    }
+
+
+def _proj(x, w):
+    return jnp.einsum("...d,dk->...k", x, w.astype(x.dtype),
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def _causal_conv(x, w, conv_state=None):
+    """Depthwise causal conv over seq. x: (B,S,DI), w: (K,DI)."""
+    k = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i].astype(x.dtype)
+              for i in range(k))
+    new_state = xp[:, -(k - 1):, :] if k > 1 else pad
+    return jax.nn.silu(out), new_state
+
+
+def _rmsnorm_gated(x, z, scale):
+    x = x * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    xf = x.astype(jnp.float32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + 1e-6)
+    return (xf * (1 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def ssd_chunked(xh, dt, a, bmat, cmat, chunk: int):
+    """SSD forward. xh: (B,S,H,P); dt: (B,S,H); a: (H,) (negative);
+    bmat/cmat: (B,S,N). Returns y: (B,S,H,P), final state (B,H,P,N)."""
+    b, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    nc = s // chunk
+    assert s % chunk == 0, (s, chunk)
+    adt = dt * a[None, None, :]                       # (B,S,H) negative
+    xdt = xh * dt[..., None]
+    # reshape into chunks
+    adt_c = adt.reshape(b, nc, chunk, h)
+    xdt_c = xdt.reshape(b, nc, chunk, h, p)
+    b_c = bmat.reshape(b, nc, chunk, n)
+    c_c = cmat.reshape(b, nc, chunk, n)
+    cum = jnp.cumsum(adt_c, axis=2)                   # (B,NC,Q,H)
+    # within-chunk: L[q,t] = exp(cum[q] - cum[t]) for q >= t
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (B,NC,Q,Q,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    l_mat = jnp.where(mask[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bcqn,bctn->bcqt", c_c, b_c,
+                    preferred_element_type=jnp.float32)
+    y_diag = jnp.einsum("bcqt,bcqth,bcthp->bcqhp", cb, l_mat,
+                        xdt_c.astype(jnp.float32))
+    # chunk-final states: S_c = sum_t exp(cum[last]-cum[t]) * B_t x_t^T
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)   # (B,NC,Q,H)
+    s_chunk = jnp.einsum("bctn,bcth,bcthp->bchpn", b_c.astype(jnp.float32),
+                         decay_to_end, xdt_c.astype(jnp.float32))
+    chunk_decay = jnp.exp(cum[:, :, -1, :])           # (B,NC,H)
+
+    def scan_fn(carry, inp):
+        s_c, d_c = inp                                 # (B,H,P,N), (B,H)
+        new = carry * d_c[:, :, None, None] + s_c
+        return new, carry                              # emit state BEFORE chunk
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)      # (B,NC,H,P,N)
+    # cross-chunk contribution: C_q exp(cum[q]) h_prev
+    decay_in = jnp.exp(cum)                            # (B,NC,Q,H)
+    y_cross = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", c_c.astype(jnp.float32),
+                         decay_in, prev_states)
+    y = (y_diag + y_cross).reshape(b, s, h, p)
+    return y.astype(xh.dtype), final
+
+
+def ssm_block(p, x, cfg, cache=None, pos=None):
+    """Full-sequence (cache=None) or one-step decode (cache set).
+
+    cache: {"conv": (B, K-1, DI), "state": (B, H, P, N)}.
+    Returns (y, new_cache).
+    """
+    bsz = x.shape[0]
+    h, pdim, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    xin = _proj(x, p["in_x"])
+    z = _proj(x, p["in_z"])
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    if cache is None:
+        xin, conv_state = _causal_conv(xin, p["conv_w"])
+        dt = jax.nn.softplus(_proj(x, p["in_dt"]).astype(jnp.float32)
+                             + p["dt_bias"].astype(jnp.float32))
+        bmat = _proj(x, p["in_b"]).astype(jnp.float32)
+        cmat = _proj(x, p["in_c"]).astype(jnp.float32)
+        xh = xin.reshape(*xin.shape[:2], h, pdim)
+        xh = sharding.constrain(xh, "batch", "seq", "heads", None)
+        # pad S to the chunk multiple: dt=0 pads are exact no-ops on the
+        # state (decay exp(0)=1, contribution 0)
+        s_len = xh.shape[1]
+        pad = (-s_len) % cfg.ssm_chunk
+        if pad:
+            xh_p = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            b_p = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+            c_p = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        else:
+            xh_p, dt_p, b_p, c_p = xh, dt, bmat, cmat
+        y, state = ssd_chunked(xh_p, dt_p, a, b_p, c_p, cfg.ssm_chunk)
+        y = y[:, :s_len]
+        y = y + xh * p["d_skip"].astype(y.dtype)[None, None, :, None]
+        y = y.reshape(*xin.shape)
+        out = _proj(_rmsnorm_gated(y, z, p["norm_scale"]), p["out"])
+        new_cache = {"conv": conv_state,
+                     "state": state.astype(jnp.float32)}
+        return out, new_cache
+
+    # ---- decode: single token, O(1) state update
+    conv_state, state = cache["conv"], cache["state"]
+    xin1, conv_state = _causal_conv(xin, p["conv_w"], conv_state)
+    dt = jax.nn.softplus(_proj(x, p["in_dt"]).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))[:, 0]  # (B,H)
+    bmat = _proj(x, p["in_b"]).astype(jnp.float32)[:, 0]            # (B,N)
+    cmat = _proj(x, p["in_c"]).astype(jnp.float32)[:, 0]
+    xh = xin1.reshape(bsz, h, pdim).astype(jnp.float32)
+    decay = jnp.exp(dt * a[None, :])                                # (B,H)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, xh, bmat)
+    state = state * decay[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", cmat, state)
+    y = y + xh * p["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(bsz, 1, -1).astype(x.dtype)
+    out = _proj(_rmsnorm_gated(y, z, p["norm_scale"]), p["out"])
+    return out, {"conv": conv_state, "state": state}
+
+
+def ssm_cache_spec(cfg, batch: int):
+    h, pdim, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, cfg.ssm_conv - 1, cfg.d_inner),
+                                     jnp.dtype(cfg.compute_dtype)),
+        "state": jax.ShapeDtypeStruct((batch, h, pdim, n), jnp.float32),
+    }
+
+
+def ssm_cache_axes():
+    return {"conv": ("batch", None, "mlp"), "state": ("batch", "heads", None, None)}

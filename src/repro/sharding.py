@@ -1,0 +1,121 @@
+"""Logical-axis sharding rules (MaxText-style) for all parallelism forms.
+
+Model code annotates tensors with *logical* axis names; a rules table maps
+them to mesh axes. Resolution is shape-aware: a logical->mesh mapping is
+dropped (replicated) when the dimension is not divisible by the mesh axes'
+product — e.g. 8 KV heads on a 16-way 'model' axis fall back to replicated
+KV (correct GQA TP semantics), without per-arch special cases.
+
+The rules table is the primary §Perf hillclimb lever (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Default rules: tuple values are tried jointly (a dim can shard over
+# several mesh axes); None = replicated.
+DEFAULT_RULES: dict[str, tuple | str | None] = {
+    "batch": ("pod", "data"),      # data parallel (pod folds into DP)
+    "seq": None,                   # sequence (sharded for SP via override)
+    "kv_seq": None,                # decode KV-cache sequence axis
+    "embed": None,                 # activation d_model (i6b tried 'data'
+                                   # for table ZeRO: memory term regressed
+                                   # 132->197 s from d-gathers at lookup)
+    "heads": "model",              # tensor parallel attention
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",                # tensor parallel FFN
+    "vocab": "model",              # tensor parallel embedding / logits
+    "experts": "model",            # expert parallel (block-diagonal)
+    "expert_cap": "data",          # expert capacity rides the data axis
+    "expert_in": "data",           # expert weight d_model dim (ZeRO)
+    "expert_mlp": "model",         # TP inside experts (when E % model != 0)
+    "fsdp": "data",                # ZeRO-3 param dim
+    "state": "model",              # SSM / LRU state width
+    "frames": None,                # encoder stub frames
+    "patches": None,
+}
+
+_CTX = threading.local()
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def resolve_spec(shape: tuple, axes: tuple, rules: dict, mesh: Mesh) -> P:
+    """PartitionSpec for ``shape`` with logical ``axes`` under ``rules``."""
+    assert len(shape) == len(axes), f"{shape} vs {axes}"
+    used: set[str] = set()
+    parts = []
+    for dim, name in zip(shape, axes):
+        if name is None:
+            parts.append(None)
+            continue
+        cand = rules.get(name)
+        if cand is None:
+            parts.append(None)
+            continue
+        cand = (cand,) if isinstance(cand, str) else tuple(cand)
+        cand = [a for a in cand if a in mesh.shape and a not in used]
+        # largest prefix whose product divides the dim
+        chosen = []
+        prod = 1
+        for a in cand:
+            if dim % (prod * _axis_size(mesh, a)) == 0:
+                chosen.append(a)
+                prod *= _axis_size(mesh, a)
+        used.update(chosen)
+        parts.append(tuple(chosen) if len(chosen) > 1 else (chosen[0] if chosen else None))
+    return P(*parts)
+
+
+def named_sharding(shape: tuple, axes: tuple, rules: dict, mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, resolve_spec(shape, axes, rules, mesh))
+
+
+@contextlib.contextmanager
+def use_rules(rules: dict, mesh: Mesh):
+    """Activate rules+mesh for :func:`constrain` during tracing."""
+    prev = getattr(_CTX, "val", None)
+    _CTX.val = (dict(rules), mesh)
+    try:
+        yield
+    finally:
+        _CTX.val = prev
+
+
+def active() -> tuple[dict, Mesh] | None:
+    return getattr(_CTX, "val", None)
+
+
+def constrain(x: jax.Array, *axes) -> jax.Array:
+    """with_sharding_constraint by logical axes; no-op outside use_rules."""
+    ctx = active()
+    if ctx is None:
+        return x
+    rules, mesh = ctx
+    spec = resolve_spec(x.shape, tuple(axes), rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def tree_shardings(shapes_tree, axes_tree, rules: dict, mesh: Mesh):
+    """Map matching (shapes, axes) pytrees to NamedShardings."""
+    # shapes_tree leaves are ShapeDtypeStructs/arrays; flatten_up_to hands the
+    # corresponding axes tuple over whole.
+    return jax.tree.map(
+        lambda s, a: named_sharding(tuple(s.shape), tuple(a), rules, mesh),
+        shapes_tree, axes_tree)
+
+
+def merge_rules(*overrides) -> dict:
+    out = dict(DEFAULT_RULES)
+    for o in overrides:
+        if o:
+            out.update(o)
+    return out

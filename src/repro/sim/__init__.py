@@ -1,0 +1,1 @@
+"""RAMSES-like AMR data substrate (Sedov3D + Orion-like generators)."""

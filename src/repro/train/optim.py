@@ -1,0 +1,79 @@
+"""AdamW with the WSD (warmup–stable–decay) schedule (minicpm,
+arXiv:2404.06395) and global-norm clipping. Optimizer state shards
+exactly like the parameters (same logical axes -> ZeRO-compatible)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    stable_steps: int = 10_000
+    decay_steps: int = 2_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def wsd_schedule(step, cfg: OptConfig):
+    """Warmup -> Stable -> (sqrt-like exponential) Decay."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    decay_t = (step - cfg.warmup_steps - cfg.stable_steps) / jnp.maximum(
+        cfg.decay_steps, 1)
+    decay_t = jnp.clip(decay_t, 0.0, 1.0)
+    decay = cfg.min_lr_ratio ** decay_t  # exponential anneal to min ratio
+    return cfg.lr * warm * decay
+
+
+def init_opt_state(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_step(params, grads, opt_state, cfg: OptConfig):
+    """One AdamW update; returns (params, opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    lr = wsd_schedule(step, cfg)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        mhat = mu / c1
+        nhat = nu / c2
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps) + \
+            cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(opt_state["mu"])
+    flat_nu = treedef.flatten_up_to(opt_state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in
+           zip(flat_p, flat_g, flat_mu, flat_nu)]
+    params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    mu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    nu = jax.tree.unflatten(treedef, [o[2] for o in out])
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return params, {"mu": mu, "nu": nu, "step": step}, metrics

@@ -1,0 +1,72 @@
+"""train_step: microbatched grad accumulation + AdamW, jit/pjit-ready.
+
+``cfg.num_microbatches`` splits the global batch inside the step with a
+``lax.scan`` so peak activation memory scales with the microbatch — the
+lever that fits nemotron-340b's train_4k cell (DESIGN.md §5). The whole
+state is donated; under a mesh everything runs SPMD from the in/out
+shardings that launch/dryrun.py attaches.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models.transformer import LM
+from . import optim
+
+
+def make_train_step(lm: LM, opt_cfg: optim.OptConfig):
+    cfg = lm.cfg
+
+    def loss_for(params, batch):
+        return lm.loss_fn(params, batch)
+
+    def train_step(state, batch):
+        params = state["params"]
+        nmb = max(1, cfg.num_microbatches)
+
+        if nmb == 1:
+            (_, metrics), grads = jax.value_and_grad(
+                loss_for, has_aux=True)(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(nmb, b // nmb, *x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+
+            def accum(carry, mb):
+                g_acc, l_acc = carry
+                (_, m), g = jax.value_and_grad(loss_for, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + m["loss"]), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), _ = jax.lax.scan(accum, (g0, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / nmb, grads)
+            metrics = {"loss": loss_sum / nmb, "aux": jnp.zeros((), jnp.float32)}
+
+        params, opt_state, opt_metrics = optim.adamw_step(
+            params, grads, {k: state[k] for k in ("mu", "nu", "step")}, opt_cfg)
+        new_state = {"params": params, **opt_state}
+        return new_state, {**metrics, **opt_metrics}
+
+    return train_step
+
+
+def init_state(lm: LM, key):
+    params = lm.init(key)
+    return {"params": params, **optim.init_opt_state(params)}
+
+
+def abstract_state(lm: LM):
+    params = lm.abstract_params()
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return {"params": params,
+            "mu": jax.tree.map(f32, params),
+            "nu": jax.tree.map(f32, params),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def state_axes(lm: LM):
+    axes = lm.param_axes()
+    return {"params": axes, "mu": axes, "nu": axes, "step": ()}

@@ -1,0 +1,153 @@
+"""Training loop with Hercule HProt checkpointing and fault tolerance.
+
+Fault-tolerance surface (DESIGN.md §6):
+  * periodic async checkpoints (contexts) + atomic finalize;
+  * restore-latest on startup -> crash/restart continues bit-exactly
+    (data pipeline is a pure function of step; RNG state is in the state);
+  * SIGTERM/SIGINT -> synchronous final checkpoint (preemption grace);
+  * optional induced crash (env TRAIN_CRASH_AT) for the supervisor demo;
+  * straggler monitor: EWMA step-time watchdog, events surfaced in logs
+    and metrics (on a real cluster this feeds the scheduler; here it is
+    observable behavior under test).
+"""
+from __future__ import annotations
+
+import os
+import signal
+import time
+
+import jax
+import numpy as np
+
+from ..data.pipeline import DataConfig, TokenPipeline
+from ..hercule.checkpoint import CheckpointManager
+from ..models.transformer import LM
+from . import optim, step as step_lib
+
+
+class StragglerMonitor:
+    """Flags steps slower than ``factor`` x the EWMA of recent steps."""
+
+    def __init__(self, factor: float = 3.0, alpha: float = 0.2, warmup: int = 3):
+        self.factor = factor
+        self.alpha = alpha
+        self.warmup = warmup
+        self.ewma = None
+        self.count = 0
+        self.events: list[tuple[int, float, float]] = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        self.count += 1
+        if self.ewma is None:
+            self.ewma = dt
+            return False
+        slow = self.count > self.warmup and dt > self.factor * self.ewma
+        if slow:
+            self.events.append((step, dt, self.ewma))
+        # stragglers don't poison the baseline
+        if not slow:
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        return slow
+
+
+class Trainer:
+    def __init__(self, lm: LM, *, opt_cfg: optim.OptConfig | None = None,
+                 data_cfg: DataConfig | None = None,
+                 ckpt_dir: str = "/tmp/hx_ckpt", ckpt_every: int = 50,
+                 ckpt_mode: str = "raw", ncf: int = 8,
+                 seed: int = 0, log_every: int = 10,
+                 hdep_dir: str | None = None, hdep_every: int = 0):
+        self.lm = lm
+        self.cfg = lm.cfg
+        self.opt_cfg = opt_cfg or optim.OptConfig()
+        self.data_cfg = data_cfg or DataConfig(
+            vocab_size=lm.cfg.vocab_size, seq_len=256, global_batch=8, seed=seed)
+        self.pipeline = TokenPipeline(self.data_cfg)
+        self.ckpt = CheckpointManager(ckpt_dir, ncf=ncf, mode=ckpt_mode)
+        self.ckpt_every = ckpt_every
+        self.log_every = log_every
+        self.hdep_every = hdep_every
+        self.hdep = None
+        if hdep_dir and hdep_every:
+            from ..hercule.database import HerculeDB
+            self.hdep = HerculeDB.create(hdep_dir, kind="hdep", ncf=ncf)
+        self.monitor = StragglerMonitor()
+        self.seed = seed
+        self._stop = False
+        self.metrics_log: list[dict] = []
+
+    def _install_signals(self):
+        def handler(signum, frame):
+            self._stop = True
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            try:
+                signal.signal(sig, handler)
+            except ValueError:
+                pass  # not main thread (tests)
+
+    def init_or_restore(self):
+        latest = self.ckpt.latest_step()
+        if latest is not None:
+            template = step_lib.abstract_state(self.lm)
+            dev = jax.devices()[0]
+            template = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(
+                    s.shape, s.dtype,
+                    sharding=jax.sharding.SingleDeviceSharding(dev)),
+                template)
+            state, attrs = self.ckpt.restore(template)
+            return state, int(latest)
+        state = step_lib.init_state(self.lm, jax.random.PRNGKey(self.seed))
+        return state, 0
+
+    def run(self, num_steps: int, *, crash_at: int | None = None):
+        self._install_signals()
+        crash_at = crash_at if crash_at is not None else \
+            int(os.environ.get("TRAIN_CRASH_AT", "0")) or None
+        state, start = self.init_or_restore()
+        train_step = jax.jit(step_lib.make_train_step(self.lm, self.opt_cfg),
+                             donate_argnums=0)
+        for s in range(start, num_steps):
+            t0 = time.perf_counter()
+            batch = self.pipeline.batch(s)
+            batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+            state, metrics = train_step(state, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            dt = time.perf_counter() - t0
+            slow = self.monitor.observe(s, dt)
+            metrics.update(step=s + 1, dt=dt, straggler=bool(slow))
+            self.metrics_log.append(metrics)
+            if self.log_every and (s + 1) % self.log_every == 0:
+                print(f"step {s+1:5d} loss {metrics['loss']:.4f} "
+                      f"lr {metrics['lr']:.2e} gnorm {metrics['grad_norm']:.2f} "
+                      f"{dt*1e3:.0f} ms{' [straggler]' if slow else ''}",
+                      flush=True)
+            if crash_at and (s + 1) == crash_at:
+                print(f"induced crash at step {s+1}", flush=True)
+                os._exit(17)
+            if (s + 1) % self.ckpt_every == 0 or (s + 1) == num_steps or self._stop:
+                self.ckpt.save(s + 1, state,
+                               attrs={"loss": metrics["loss"]})
+            if self.hdep is not None and (s + 1) % self.hdep_every == 0:
+                self._dump_analysis(s + 1, state)
+            if self._stop:
+                print(f"signal received: checkpointed at step {s+1}, exiting",
+                      flush=True)
+                break
+        self.ckpt.wait()
+        self.ckpt.close()
+        return state
+
+    def _dump_analysis(self, step: int, state):
+        """HDep flow at its own frequency (paper fig. 1)."""
+        from ..hercule import hdep as hdep_mod
+        ctx = self.hdep.begin_context(step)
+        flat, _ = jax.tree_util.tree_flatten_with_path(state["params"])
+        stats = {}
+        for path, leaf in flat:
+            name = jax.tree_util.keystr(path).strip("'[]").replace("']['", ".")
+            arr = np.asarray(leaf)
+            if arr.ndim >= 2:
+                stats[name] = arr
+        hdep_mod.write_analysis(ctx, 0, stats)
+        ctx.finalize(attrs={"step": step})

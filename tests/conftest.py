@@ -1,0 +1,8 @@
+import os
+import sys
+
+# tests see the default single CPU device (the dry-run sets its own flags
+# in a subprocess); keep any user flags out of the way.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

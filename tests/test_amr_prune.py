@@ -1,0 +1,110 @@
+"""AMR tree invariants, decomposition, and pruning semantics."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import decompose, prune
+from repro.core.amr import AMRTree, subset_tree
+from repro.sim import amrgen, fields
+
+
+@pytest.fixture(scope="module")
+def orion_tree():
+    f = fields.orion(seed=7)
+    t = amrgen.generate_tree(f, min_level=3, max_level=7,
+                             threshold=1.0, level_factor=1.6)
+    t.validate()
+    return t
+
+
+@pytest.fixture(scope="module")
+def domains(orion_tree):
+    return decompose.assign_domains(orion_tree, 8)
+
+
+def test_tree_structure(orion_tree):
+    t = orion_tree
+    assert t.n_levels >= 5
+    assert t.level_offsets[1] - t.level_offsets[0] == 1  # single root
+    # BFS child invariant is checked inside validate(); re-check parents
+    parent = t.parent()
+    cs = t.child_start()
+    refined = np.flatnonzero(t.refine)
+    assert (parent[cs[refined]] == refined).all()
+
+
+def test_restriction_is_mean_of_sons(orion_tree):
+    t = orion_tree
+    cs = t.child_start()
+    refined = np.flatnonzero(t.refine)[:100]
+    v = t.fields["density"]
+    sons = v[(cs[refined][:, None] + np.arange(8)[None, :])]
+    assert np.allclose(v[refined], sons.mean(axis=1))
+
+
+def test_domain_balance(orion_tree, domains):
+    counts = np.bincount(domains)
+    assert counts.size == 8
+    assert counts.max() - counts.min() <= 1
+
+
+def test_local_tree_and_prune_invariants(orion_tree, domains):
+    t = orion_tree
+    idx = decompose._LevelIndex(t)
+    lt = decompose.local_tree(t, domains, 3, coarse_level=2, index=idx)
+    lt.validate()
+    pt = prune.prune(lt)
+    pt.validate()
+
+    # (1) pruning only removes nodes
+    assert pt.n_nodes < lt.n_nodes
+    # (2) every owned leaf survives with identical data
+    def owned_leaf_set(tr):
+        sel = ~tr.refine & tr.owner
+        lv = tr.levels()[sel]
+        key = [tuple(c) + (int(l),) for c, l in zip(tr.coords[sel], lv)]
+        return dict(zip(key, tr.fields["density"][sel]))
+    before = owned_leaf_set(lt)
+    after = owned_leaf_set(pt)
+    assert before.keys() == after.keys()
+    for k in before:
+        assert before[k] == after[k]
+    # (3) removed fraction in the paper's observed band (loose)
+    frac = prune.removed_fraction(lt, pt)
+    assert 0.05 < frac < 0.7
+    # (4) idempotence: pruning a pruned tree removes nothing
+    pt2 = prune.prune(pt)
+    assert pt2.n_nodes == pt.n_nodes
+
+
+def test_ghosts_are_neighbors(orion_tree, domains):
+    t = orion_tree
+    idx = decompose._LevelIndex(t)
+    g = decompose.ghost_leaves(t, domains, 0, index=idx)
+    leaves = np.flatnonzero(~t.refine)
+    leaf_rank = np.full(t.n_nodes, -1, np.int64)
+    leaf_rank[leaves] = np.arange(leaves.size)
+    assert (domains[leaf_rank[g]] != 0).all()  # ghosts are never mine
+    assert g.size > 0
+
+
+def test_subset_tree_keep_all_is_identity(orion_tree):
+    t = orion_tree
+    s = subset_tree(t, np.ones(t.n_nodes, bool))
+    assert s.n_nodes == t.n_nodes
+    assert np.array_equal(s.refine, t.refine)
+    assert np.array_equal(s.coords, t.coords)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_random_tree_prune_validates(seed):
+    """Property: pruning any generated local tree keeps a valid octree."""
+    f = fields.orion(seed=seed % 100)
+    t = amrgen.generate_tree(f, min_level=2, max_level=5,
+                             threshold=1.0, level_factor=1.5)
+    dom = decompose.assign_domains(t, 4)
+    lt = decompose.local_tree(t, dom, seed % 4, coarse_level=1)
+    pt = prune.prune(lt)
+    pt.validate()
+    assert pt.owner.sum() == lt.owner.sum()

@@ -1,0 +1,65 @@
+"""bitstream: pack/unpack roundtrips (unit + hypothesis property)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitstream as bs
+
+
+def _mask(nbits):
+    nb = nbits.astype(np.uint64)
+    return np.where(nbits >= 32, np.uint32(0xFFFFFFFF),
+                    ((np.uint64(1) << nb) - np.uint64(1)).astype(np.uint32))
+
+
+def test_roundtrip_basic():
+    rng = np.random.default_rng(0)
+    vals = rng.integers(0, 2**32, 5000, dtype=np.uint64).astype(np.uint32)
+    nbits = rng.integers(0, 33, 5000).astype(np.int32)
+    words, total = bs.pack_bits_host(vals, nbits)
+    assert total == int(nbits.sum())
+    out = bs.unpack_bits_host(words, nbits)
+    assert np.array_equal(out, vals & _mask(nbits))
+
+
+def test_all_32bit():
+    vals = np.arange(100, dtype=np.uint32) * 40503
+    nbits = np.full(100, 32, np.int32)
+    words, total = bs.pack_bits_host(vals, nbits)
+    assert total == 3200
+    assert np.array_equal(bs.unpack_bits_host(words, nbits), vals)
+
+
+def test_zero_bits():
+    vals = np.full(64, 0xDEADBEEF, np.uint32)
+    nbits = np.zeros(64, np.int32)
+    words, total = bs.pack_bits_host(vals, nbits)
+    assert total == 0
+    assert np.array_equal(bs.unpack_bits_host(words, nbits), np.zeros(64, np.uint32))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2**32 - 1), st.integers(0, 32)),
+                min_size=1, max_size=300))
+def test_roundtrip_property(pairs):
+    vals = np.array([p[0] for p in pairs], np.uint32)
+    nbits = np.array([p[1] for p in pairs], np.int32)
+    words, _ = bs.pack_bits_host(vals, nbits)
+    out = bs.unpack_bits_host(words, nbits)
+    assert np.array_equal(out, vals & _mask(nbits))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(allow_nan=False, width=64), min_size=1, max_size=64))
+def test_f64_pair_roundtrip(xs):
+    a = np.array(xs, np.float64)
+    hi, lo = bs.f64_to_pair(a)
+    assert np.array_equal(bs.pair_to_f64(hi, lo), a)
+
+
+def test_f64_pair_specials():
+    a = np.array([np.nan, np.inf, -np.inf, -0.0, 5e-324, np.pi])
+    hi, lo = bs.f64_to_pair(a)
+    back = bs.pair_to_f64(hi, lo)
+    assert np.array_equal(back, a, equal_nan=True)
+    assert np.signbit(back[3])  # -0.0 preserved

@@ -1,0 +1,64 @@
+"""Boolean RLE base-52 codec + Hilbert curve properties."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import boolcodec as bc, hilbert as hb
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.booleans(), min_size=1, max_size=2000))
+def test_boolcodec_roundtrip(bits):
+    arr = np.array(bits, bool)
+    enc = bc.encode(arr)
+    assert enc.isalpha() or enc == b""  # base-52 letters only
+    assert np.array_equal(bc.decode(enc, len(arr)), arr)
+
+
+def test_boolcodec_long_runs():
+    arr = np.zeros(1_000_000, bool)
+    arr[123_456:654_321] = True
+    enc = bc.encode(arr)
+    assert len(enc) < 20  # few giant runs -> bytes
+    assert np.array_equal(bc.decode(enc, arr.size), arr)
+    # paper regime: ownership compresses ~99% vs bitfield
+    assert bc.compression_vs_bitfield(arr) > 0.99
+
+
+def test_boolcodec_alternating_worstcase():
+    arr = (np.arange(4096) % 2).astype(bool)
+    enc = bc.encode(arr)
+    assert np.array_equal(bc.decode(enc, arr.size), arr)
+
+
+def test_hilbert_bijective_8cube():
+    from itertools import product
+    c = np.array(list(product(range(8), repeat=3)), np.uint64)
+    k = hb.coords_to_key(c, 3)
+    assert sorted(k.tolist()) == list(range(512))
+    assert np.array_equal(hb.key_to_coords(k, 3), c)
+
+
+def test_hilbert_continuity():
+    cc = hb.key_to_coords(np.arange(4096, dtype=np.uint64), 4)
+    d = np.abs(np.diff(cc.astype(np.int64), axis=0)).sum(1)
+    assert (d == 1).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 500))
+def test_hilbert_inverse_property(bits, n):
+    rng = np.random.default_rng(bits * 1000 + n)
+    coords = rng.integers(0, 2**bits, (n, 3)).astype(np.uint64)
+    keys = hb.coords_to_key(coords, bits)
+    assert np.array_equal(hb.key_to_coords(keys, bits), coords)
+
+
+def test_domain_split_balance():
+    rng = np.random.default_rng(0)
+    keys = rng.permutation(10_000).astype(np.uint64)
+    dom = hb.domain_split(keys, 7)
+    counts = np.bincount(dom)
+    assert counts.max() - counts.min() <= 1
+    # contiguity along the curve
+    order = np.argsort(keys)
+    assert (np.diff(dom[order]) >= 0).all()

@@ -1,0 +1,111 @@
+"""Father-son FP delta codec: exactness (incl. specials), rates, trees."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fpdelta, pyramid
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(allow_nan=False, width=64), min_size=8, max_size=256),
+       st.integers(2, 6))
+def test_encode_decode_exact_f64(vals, zbits):
+    vals = np.array(vals)
+    g = len(vals) // 8
+    sons = vals[:g * 8].reshape(g, 8)
+    pred = sons.mean(axis=1)
+    blk = fpdelta.encode(pred, sons, zbits=zbits)
+    assert np.array_equal(fpdelta.decode(blk, pred), sons)
+
+
+def test_specials_roundtrip():
+    sons = np.array([[np.nan, np.inf, -np.inf, 0.0, -0.0, 1e-310, np.pi, -1.5]])
+    pred = np.array([0.5])
+    blk = fpdelta.encode(pred, sons)
+    out = fpdelta.decode(blk, pred)
+    assert np.array_equal(out, sons, equal_nan=True)
+    assert np.signbit(out[0, 4])
+
+
+@pytest.mark.parametrize("width", [64, 32, 16])
+def test_widths(width):
+    rng = np.random.default_rng(width)
+    pred = rng.standard_normal(500)
+    sons = pred[:, None] * (1 + 0.01 * rng.standard_normal((500, 8)))
+    if width == 16:
+        import ml_dtypes
+        sons_cast = sons.astype(np.float32).astype(ml_dtypes.bfloat16)
+    elif width == 32:
+        sons_cast = sons.astype(np.float32)
+    else:
+        sons_cast = sons
+    blk = fpdelta.encode(pred, sons_cast.astype(np.float64) if width == 64
+                         else sons_cast, width=width)
+    out = fpdelta.decode(blk, pred)
+    assert np.array_equal(np.asarray(out), np.asarray(sons_cast))
+
+
+def test_good_predictor_compresses():
+    """Correlated sons -> leading zeros shared -> paper-regime rates."""
+    rng = np.random.default_rng(1)
+    pred = rng.lognormal(size=4096)
+    sons = pred[:, None] * (1 + 1e-3 * rng.standard_normal((4096, 8)))
+    blk = fpdelta.encode(pred, sons)
+    assert blk.rate_vs_raw() > 0.15  # paper: 16-18 %
+
+
+def test_random_data_no_compression():
+    rng = np.random.default_rng(2)
+    pred = rng.standard_normal(1024)
+    sons = rng.standard_normal((1024, 8))
+    blk = fpdelta.encode(pred, sons)
+    assert blk.rate_vs_raw() < 0.05  # sign bit differences kill sharing
+
+
+def test_tree_roundtrip_and_partial_decode():
+    from repro.sim import amrgen, fields
+    tree = amrgen.generate_tree(fields.sedov(), min_level=2, max_level=5,
+                                threshold=1.3)
+    tc = fpdelta.encode_tree_field(tree, "density")
+    dec = fpdelta.decode_tree_field(tree, tc)
+    assert np.array_equal(dec, tree.fields["density"])
+    # partial decode = paper's level-bounded visualization path
+    d2 = fpdelta.decode_tree_field(tree, tc, to_level=2)
+    upto = tree.level_offsets[3]
+    assert np.array_equal(d2[:upto], tree.fields["density"][:upto])
+    assert (d2[upto:] == 0).all()
+
+
+def test_zbits_runtime_tunable():
+    """Paper: the 4-bit default is runtime-tunable for locally-varying
+    fields; more zbits must never break exactness."""
+    rng = np.random.default_rng(3)
+    pred = np.full(256, 1.0)
+    sons = np.full((256, 8), 1.0)
+    sons[:, 0] += 1e-15  # nearly-equal values -> deep leading zeros
+    for zbits in (4, 6, 8):
+        blk = fpdelta.encode(pred, sons, zbits=zbits)
+        assert np.array_equal(fpdelta.decode(blk, pred), sons)
+    r4 = fpdelta.encode(pred, sons, zbits=4).rate_vs_raw()
+    r6 = fpdelta.encode(pred, sons, zbits=6).rate_vs_raw()
+    assert r6 > r4  # more zero-budget pays off on smooth data
+
+
+# ------------------------------------------------------------- ML pyramid
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 3000), st.sampled_from(["float32", "float64"]))
+def test_pyramid_roundtrip_property(n, dtype):
+    rng = np.random.default_rng(n)
+    x = rng.standard_normal(n).astype(dtype)
+    pc = pyramid.encode_pyramid(x)
+    assert np.array_equal(pyramid.decode_pyramid(pc), x)
+
+
+def test_temporal_delta_roundtrip_and_rate():
+    rng = np.random.default_rng(4)
+    prev = rng.standard_normal((64, 128)).astype(np.float32)
+    cur = prev + 1e-5 * rng.standard_normal(prev.shape).astype(np.float32)
+    dc = pyramid.encode_delta(cur, prev)
+    assert np.array_equal(pyramid.decode_delta(dc, prev), cur)
+    assert dc.nbytes < cur.nbytes * 0.8  # small updates compress

@@ -1,0 +1,178 @@
+"""Hercule database layer: contexts, NCF aggregation, rollover, crash
+safety, codecs; checkpoint manager incl. async + delta-chain + elastic."""
+import json
+import os
+import shutil
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.hercule import HerculeDB, hdep
+from repro.hercule.checkpoint import CheckpointManager
+
+
+@pytest.fixture()
+def tmpdb(tmp_path):
+    return str(tmp_path / "db")
+
+
+def test_context_roundtrip(tmpdb):
+    db = HerculeDB.create(tmpdb, kind="hdep", ncf=4)
+    ctx = db.begin_context(5)
+    a = np.arange(100, dtype=np.float32).reshape(10, 10)
+    ctx.write_array(2, "field/x", a)
+    ctx.finalize(attrs={"note": "hi"})
+    assert db.contexts() == [5]
+    got = db.read(5, 2, "field/x")
+    np.testing.assert_array_equal(got, a)
+    assert db.load_index(5)["attrs"]["note"] == "hi"
+
+
+def test_ncf_file_aggregation(tmpdb):
+    """N domains, NCF=P -> ceil(N/P) files (paper's 16x file reduction)."""
+    for ncf, want in ((1, 16), (4, 4), (16, 1)):
+        root = f"{tmpdb}_{ncf}"
+        db = HerculeDB.create(root, kind="hprot", ncf=ncf)
+        ctx = db.begin_context(0)
+        for d in range(16):
+            ctx.write_array(d, "x", np.zeros(10))
+        ctx.finalize()
+        assert db.n_files() == want, (ncf, db.n_files())
+        db.close()
+
+
+def test_max_file_size_rollover(tmpdb):
+    db = HerculeDB.create(tmpdb, kind="hprot", ncf=8, max_file_bytes=1000)
+    for step in range(4):
+        ctx = db.begin_context(step)
+        ctx.write_array(0, "x", np.zeros(100))  # 800 B each
+        ctx.finalize()
+    # limit checked before each write: 2 contexts land per file
+    assert db.n_files() == 2
+    # every context still readable
+    for step in range(4):
+        np.testing.assert_array_equal(db.read(step, 0, "x"), np.zeros(100))
+    db.close()
+
+
+def test_multiple_contexts_share_file(tmpdb):
+    """Hercule semantics: many time steps in ONE physical file."""
+    db = HerculeDB.create(tmpdb, kind="hprot", ncf=8)
+    for step in range(5):
+        ctx = db.begin_context(step)
+        ctx.write_array(0, "x", np.full(4, step, np.int32))
+        ctx.finalize()
+    assert db.n_files() == 1
+    for step in range(5):
+        np.testing.assert_array_equal(db.read(step, 0, "x"),
+                                      np.full(4, step, np.int32))
+
+
+def test_unfinalized_context_invisible(tmpdb):
+    db = HerculeDB.create(tmpdb, kind="hprot", ncf=2)
+    ctx = db.begin_context(1)
+    ctx.write_array(0, "x", np.zeros(5))
+    ctx.finalize()
+    ctx2 = db.begin_context(2)  # never finalized = crash mid-write
+    ctx2.write_array(0, "x", np.ones(5))
+    assert db.contexts() == [1]
+    assert db.latest_context() == 1
+
+
+# ---------------------------------------------------------- checkpointing
+
+def _state():
+    return {"params": {"w": jnp.arange(512, dtype=jnp.float32).reshape(16, 32),
+                       "scale": jnp.float32(2.5) * jnp.ones(8)},
+            "step": jnp.int32(3)}
+
+
+def _template(state):
+    dev = jax.devices()[0]
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(
+            jnp.shape(x), jnp.result_type(x),
+            sharding=jax.sharding.SingleDeviceSharding(dev)), state)
+
+
+@pytest.mark.parametrize("mode", ["raw", "delta", "pyramid", "auto"])
+def test_checkpoint_modes_bitwise(tmpdb, mode):
+    state = _state()
+    mgr = CheckpointManager(tmpdb, ncf=2, mode=mode, async_write=False)
+    mgr.save(1, state)
+    s2 = jax.tree.map(lambda x: x + 1 if x.dtype.kind == "f" else x, state)
+    mgr.save(2, s2)
+    for step, want in ((1, state), (2, s2)):
+        got, _ = mgr.restore(_template(state), step=step)
+        assert jax.tree.all(jax.tree.map(
+            lambda a, b: bool(jnp.array_equal(a, b)), got, want)), (mode, step)
+    mgr.close()
+
+
+def test_async_checkpoint_barrier(tmpdb):
+    state = _state()
+    mgr = CheckpointManager(tmpdb, ncf=2, mode="raw", async_write=True)
+    for step in range(1, 6):
+        mgr.save(step, state)
+    mgr.wait()
+    assert mgr.db.contexts() == [1, 2, 3, 4, 5]
+    mgr.close()
+
+
+def test_elastic_restore_different_sharding(tmp_path):
+    """Save from one layout, restore to another (slices recomposed)."""
+    root = str(tmp_path / "el")
+    big = {"w": jnp.arange(64 * 8, dtype=jnp.float32).reshape(64, 8)}
+    mgr = CheckpointManager(root, ncf=2, async_write=False)
+    mgr.save(1, big)
+    got, _ = mgr.restore(_template(big), step=1)
+    np.testing.assert_array_equal(np.asarray(got["w"]), np.asarray(big["w"]))
+    mgr.close()
+
+
+def test_checkpoint_attrs_and_latest(tmpdb):
+    mgr = CheckpointManager(tmpdb, ncf=1, async_write=False)
+    mgr.save(10, _state(), attrs={"loss": 0.5})
+    mgr.save(20, _state(), attrs={"loss": 0.25})
+    assert mgr.latest_step() == 20
+    _, attrs = mgr.restore(_template(_state()))
+    assert attrs["loss"] == 0.25
+    mgr.close()
+
+
+# ----------------------------------------------------------------- HDep
+
+def test_hdep_analysis_roundtrip(tmpdb):
+    db = HerculeDB.create(tmpdb, kind="hdep", ncf=2)
+    ctx = db.begin_context(0)
+    rng = np.random.default_rng(0)
+    tensors = {"w1": (rng.standard_normal((64, 32)) * 1e-2).astype(np.float32),
+               "stats": rng.standard_normal(1000)}
+    hdep.write_analysis(ctx, 0, tensors)
+    ctx.finalize()
+    out = hdep.read_analysis(db, 0)
+    for k, v in tensors.items():
+        np.testing.assert_array_equal(out[k], v)
+
+
+def test_hdep_amr_object_roundtrip(tmp_path):
+    from repro.core import decompose, prune
+    from repro.sim import amrgen, fields
+    t = amrgen.generate_tree(fields.sedov(), min_level=2, max_level=5,
+                             threshold=1.2)
+    dom = decompose.assign_domains(t, 4)
+    lt = decompose.local_tree(t, dom, 1, coarse_level=1)
+    pt = prune.prune(lt)
+    db = HerculeDB.create(str(tmp_path / "hd"), kind="hdep", ncf=2)
+    ctx = db.begin_context(0)
+    hdep.write_domain_tree(ctx, 1, pt)
+    ctx.finalize()
+    rt = hdep.read_domain_tree(db, 0, 1)
+    rt.validate()
+    assert np.array_equal(rt.refine, pt.refine)
+    assert np.array_equal(rt.owner, pt.owner)
+    assert np.array_equal(rt.coords, pt.coords)
+    for f in pt.fields:
+        assert np.array_equal(rt.fields[f], pt.fields[f]), f

@@ -1,0 +1,47 @@
+"""GPipe over the pod axis == sequential forward (subprocess: needs
+forced multi-device CPU)."""
+import os
+import subprocess
+import sys
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+_CODE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from repro.launch.mesh import make_test_mesh
+from repro.launch import pipeline
+
+mesh = make_test_mesh((4, 2), ("pod", "data"))
+rng = np.random.default_rng(0)
+L, D = 8, 16          # 8 layers -> 4 stages x 2 layers
+params = {
+    "w": jnp.asarray(rng.standard_normal((L, D, D)) * 0.3, jnp.float32),
+    "b": jnp.asarray(rng.standard_normal((L, D)) * 0.1, jnp.float32),
+}
+
+def stage_fn(p, x):     # p has leading dim L/S
+    for i in range(p["w"].shape[0]):
+        x = jnp.tanh(x @ p["w"][i] + p["b"][i])
+    return x
+
+n_micro, mb = 6, 4
+x = jnp.asarray(rng.standard_normal((n_micro, mb, D)), jnp.float32)
+stages = pipeline.stack_stages(params, 4)
+with mesh:
+    got = pipeline.gpipe_forward(stage_fn, stages, x, mesh=mesh)
+want = pipeline.sequential_forward(stage_fn, stages, x, 4)
+err = float(jnp.max(jnp.abs(got - want)))
+assert err < 1e-5, err
+assert abs(pipeline.bubble_fraction(6, 4) - 3/9) < 1e-9
+print("PIPELINE_OK", err)
+"""
+
+
+def test_gpipe_equivalence():
+    out = subprocess.run([sys.executable, "-c", _CODE],
+                         env={**os.environ, "PYTHONPATH": SRC},
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "PIPELINE_OK" in out.stdout
