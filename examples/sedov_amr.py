@@ -6,6 +6,10 @@
   threshold filter + slice "visualization" (paper fig. 8 analogue).
 
     PYTHONPATH=src python examples/sedov_amr.py
+
+With ``--insitu`` the same tree additionally flows through the in-transit
+engine (compute -> staging -> reducers -> reduced HDep -> catalog), and
+the catalog's slice is checked against the post-hoc one.
 """
 import os
 import shutil
@@ -20,7 +24,31 @@ from repro.hercule import HerculeDB, analysis, hdep
 from repro.sim import amrgen, fields
 
 ROOT = "/tmp/hx_sedov_hdep"
+INSITU_ROOT = "/tmp/hx_sedov_insitu"
 N_DOMAINS = 8
+
+
+def run_insitu(tree, g):
+    """Opt-in: drive the in-transit engine with the generated tree and
+    check its catalog slice against the post-hoc assembly ``g``."""
+    from repro.insitu import Catalog, InTransitEngine, SliceReducer
+    print("== in-transit flow (--insitu)")
+    shutil.rmtree(INSITU_ROOT, ignore_errors=True)
+    slicer = SliceReducer(field="density", axis=2, position=0.5,
+                          resolution=128)
+    engine = InTransitEngine(INSITU_ROOT, [slicer],
+                             policy="drop-oldest").start()
+    engine.submit(0, tree)
+    engine.close()
+    cat = Catalog(INSITU_ROOT)
+    img = cat.query(0, slicer.name)["image"]
+    ref = analysis.slice_image(g, "density", axis=2, position=0.5,
+                               resolution=128)
+    match = np.array_equal(img, ref, equal_nan=True)
+    print(f"   reduced contexts: {cat.steps()}, slice matches "
+          f"post-hoc assembly: {match}")
+    cat.query(0, slicer.name)
+    print(f"   cache: {cat.cache_info()}")
 
 
 def main():
@@ -81,6 +109,9 @@ def main():
     for row in chars[::step]:
         print("   " + "".join(row[::step // 2 if step > 1 else 1]))
     print(f"   slice saved to {out}")
+
+    if "--insitu" in sys.argv[1:]:
+        run_insitu(tree, g)
 
 
 if __name__ == "__main__":

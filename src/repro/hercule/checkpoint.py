@@ -45,6 +45,15 @@ def _leaf_paths(tree) -> list[tuple[str, object]]:
     return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
 
 
+def leaf_name(path) -> str:
+    """Flatten a pytree key path to a dotted record name ('params.w').
+
+    Shared by the HDep analysis dump and the in-transit engine so both
+    flows emit identical names for the same parameter.
+    """
+    return jax.tree_util.keystr(path).strip("'[]").replace("']['", ".")
+
+
 def _shards_of(leaf) -> list[tuple[int, tuple, np.ndarray]]:
     """(domain, index-slices, data) per *owned* shard (replicas pruned)."""
     if isinstance(leaf, jax.Array) and hasattr(leaf, "addressable_shards"):

@@ -8,6 +8,13 @@ from the objects alone — nothing about the producing code is needed.
 
 The ML flavor (`write_analysis` / `read_analysis`) stores named tensors
 with the pyramid codec for weight/activation analysis dumps.
+
+The *reduced* flavor (`write_reduced` / `read_reduced`) stores the output
+of in-transit reductions (:mod:`repro.insitu`): purpose-specific
+lightweight objects (slice images, projections, histograms, LOD tree
+cuts) written at their own cadence, far smaller than full domain trees.
+Each reducer's arrays live under ``reduced/<reducer>/<name>`` and stay
+self-describing — a catalog reader needs only the database directory.
 """
 from __future__ import annotations
 
@@ -82,22 +89,73 @@ def domains_in(db: HerculeDB, step: int) -> list[int]:
                    if r.name == "amr/refine"})
 
 
+# ----------------------------------------------------------- reduced flow
+
+def _write_maybe_pyramid(ctx, domain: int, name: str, arr: np.ndarray,
+                         compress: bool) -> None:
+    """Write one tensor raw, or pyramid-compressed when that shrinks it."""
+    arr = np.ascontiguousarray(arr)
+    if compress and arr.dtype.kind == "f" and arr.size >= 64:
+        pc = pyr.encode_pyramid(arr)
+        payload = codecs.encode_pyramid(pc)
+        if len(payload) < arr.nbytes:
+            ctx.write_bytes(domain, name, payload, dtype=str(arr.dtype),
+                            shape=arr.shape, codec="fpdelta-pyramid",
+                            meta={"pad": pc.pad})
+            return
+    ctx.write_array(domain, name, arr)
+
+
+def write_reduced(ctx, domain: int, reducer: str,
+                  arrays: dict[str, np.ndarray], *,
+                  compress: bool = False) -> None:
+    """Write one reducer's output arrays as a reduced object.
+
+    Reduced objects are already small (that is the point of reducing), so
+    they default to raw records — a catalog cold read is then a single
+    seek+memcpy. ``compress=True`` additionally runs float arrays through
+    the (lossless) pyramid codec, trading write/read CPU for bytes; worth
+    it for archival cadences, not for live viewer traffic. Array names
+    may not contain ``/`` — the record path is
+    ``reduced/<reducer>/<name>``.
+    """
+    for name, arr in arrays.items():
+        assert "/" not in name, f"reduced array name {name!r} contains '/'"
+        _write_maybe_pyramid(ctx, domain, f"reduced/{reducer}/{name}",
+                             arr, compress)
+
+
+def read_reduced(db: HerculeDB, step: int, reducer: str,
+                 domain: int = 0) -> dict[str, np.ndarray]:
+    """Read back one reducer's output arrays from a context."""
+    from .database import decode_record
+    prefix = f"reduced/{reducer}/"
+    out = {}
+    for rec in db.records(step, domain=domain):
+        if rec.name.startswith(prefix):
+            out[rec.name[len(prefix):]] = decode_record(db, rec)
+    if not out:
+        raise KeyError(f"no reduced object {reducer!r} in context {step}")
+    return out
+
+
+def reducers_in(db: HerculeDB, step: int) -> list[str]:
+    """Names of all reduced objects present in a context."""
+    names = set()
+    for rec in db.records(step):
+        if rec.name.startswith("reduced/"):
+            names.add(rec.name.split("/", 2)[1])
+    return sorted(names)
+
+
 # ---------------------------------------------------------------- ML flow
 
 def write_analysis(ctx, domain: int, tensors: dict[str, np.ndarray], *,
                    compress: bool = True) -> None:
     """Dump named tensors (weight stats, activations) for offline analysis."""
     for name, arr in tensors.items():
-        arr = np.asarray(arr)
-        if compress and arr.dtype.kind == "f" and arr.size >= 64:
-            pc = pyr.encode_pyramid(arr)
-            payload = codecs.encode_pyramid(pc)
-            if len(payload) < arr.nbytes:
-                ctx.write_bytes(domain, f"analysis/{name}", payload,
-                                dtype=str(arr.dtype), shape=arr.shape,
-                                codec="fpdelta-pyramid", meta={"pad": pc.pad})
-                continue
-        ctx.write_array(domain, f"analysis/{name}", arr)
+        _write_maybe_pyramid(ctx, domain, f"analysis/{name}",
+                             np.asarray(arr), compress)
 
 
 def read_analysis(db: HerculeDB, step: int, domain: int = 0) -> dict[str, np.ndarray]:

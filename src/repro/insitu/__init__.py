@@ -1,0 +1,28 @@
+"""In-transit analysis: staged reductions from compute to lightweight HDep.
+
+The paper's in-situ/in-transit layer (fig. 1): instead of dumping full
+state for post-hoc processing, the compute flow stages snapshots to an
+analysis flow that reduces them to purpose-specific lightweight objects
+written at an independent cadence.
+
+    compute --push--> StagingArea --pop--> InTransitEngine(ReducerDAG)
+                                                  |
+                                       HDep reduced contexts
+                                                  |
+                many viewers  <--LRU cache--   Catalog
+
+  * :mod:`staging`  — double-buffered device→host hand-off with a bounded
+    queue and explicit backpressure (``block``/``drop-oldest``/``subsample``).
+  * :mod:`reducers` — composable reduction operators over AMR trees and
+    train states, combined in a DAG.
+  * :mod:`engine`   — worker pool consuming staged snapshots and writing
+    reduced HDep objects at its own output frequency.
+  * :mod:`catalog`  — the read side: cached queries for many concurrent
+    viewers.
+"""
+from .catalog import Catalog                                   # noqa: F401
+from .engine import InTransitEngine                            # noqa: F401
+from .reducers import (LevelHistogramReducer, LODCutReducer,   # noqa: F401
+                       ProjectionReducer, Reducer, ReducerDAG,
+                       SliceReducer, SpectraReducer, TensorNormReducer)
+from .staging import POLICIES, Snapshot, StagingArea           # noqa: F401

@@ -1,0 +1,128 @@
+"""Query API over reduced HDep objects, with an LRU reduction cache.
+
+The paper's many-concurrent-viewers scenario: dashboards and viewers ask
+for the same few reductions over and over. The catalog keys an LRU cache
+on ``(step, reducer, region)`` so repeated queries are served from memory
+— the database files are only touched on a miss (observable via
+:attr:`io_reads` / :attr:`cache_hits`).
+
+A *region* is an optional tuple of ``(lo, hi)`` pairs cropping the
+leading axes of every array in the reduced object (e.g. a zoomed window
+of a slice image). Cropping happens on the cached full object, so a
+window query after a full query is also a cache hit.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+
+import numpy as np
+
+from ..hercule import hdep
+from ..hercule.database import HerculeDB
+
+Region = tuple[tuple[int, int], ...]
+
+
+def _normalize_region(region) -> Region | None:
+    if region is None:
+        return None
+    return tuple((int(lo), int(hi)) for lo, hi in region)
+
+
+def _crop(arrays: dict[str, np.ndarray], region: Region
+          ) -> dict[str, np.ndarray]:
+    out = {}
+    for name, arr in arrays.items():
+        if arr.ndim >= len(region):
+            sl = tuple(slice(lo, hi) for lo, hi in region)
+            out[name] = arr[sl]
+        else:
+            out[name] = arr
+    return out
+
+
+class Catalog:
+    """Read-side view of an in-transit HDep database."""
+
+    def __init__(self, root: str | HerculeDB, *, cache_entries: int = 64):
+        self.db = root if isinstance(root, HerculeDB) else \
+            HerculeDB.open(root)
+        self.cache_entries = cache_entries
+        self._cache: collections.OrderedDict = collections.OrderedDict()
+        self._lock = threading.Lock()
+        self.io_reads = 0      # records decoded from the database files
+        self.cache_hits = 0
+        self.cache_misses = 0
+
+    # ------------------------------------------------------------ discovery
+    def steps(self) -> list[int]:
+        return self.db.contexts()
+
+    def latest_step(self) -> int | None:
+        return self.db.latest_context()
+
+    def reducers(self, step: int) -> list[str]:
+        return hdep.reducers_in(self.db, step)
+
+    def attrs(self, step: int) -> dict:
+        return self.db.load_index(step)["attrs"]
+
+    # ---------------------------------------------------------------- query
+    def query(self, step: int, reducer: str, *,
+              region=None, domain: int = 0) -> dict[str, np.ndarray]:
+        """Fetch one reduced object, optionally cropped to ``region``.
+
+        Contexts are immutable once finalized, so cached entries never go
+        stale. The full object is what gets cached; region crops are views
+        of the cached arrays.
+        """
+        region = _normalize_region(region)
+        key = (step, reducer, domain)
+        with self._lock:
+            full = self._cache.get(key)
+            if full is not None:
+                self._cache.move_to_end(key)
+                self.cache_hits += 1
+        if full is None:
+            full = hdep.read_reduced(self.db, step, reducer, domain=domain)
+            for arr in full.values():
+                # cached arrays are shared across viewers: freeze them so
+                # an in-place edit can't poison later queries (mutating
+                # callers take an explicit .copy())
+                arr.flags.writeable = False
+            with self._lock:
+                self.cache_misses += 1
+                self.io_reads += len(full)
+                self._cache[key] = full
+                self._cache.move_to_end(key)
+                while len(self._cache) > self.cache_entries:
+                    self._cache.popitem(last=False)
+        if region is None:
+            return dict(full)
+        return _crop(full, region)
+
+    def series(self, reducer: str, name: str, *,
+               steps: list[int] | None = None) -> tuple[np.ndarray, list]:
+        """(steps, values) time series of one array across contexts."""
+        steps = self.steps() if steps is None else steps
+        out_steps, vals = [], []
+        for s in steps:
+            try:
+                obj = self.query(s, reducer)
+            except KeyError:
+                continue
+            if name in obj:
+                out_steps.append(s)
+                vals.append(obj[name])
+        return np.asarray(out_steps, np.int64), vals
+
+    # ----------------------------------------------------------------- admin
+    def cache_info(self) -> dict:
+        with self._lock:
+            return {"entries": len(self._cache), "hits": self.cache_hits,
+                    "misses": self.cache_misses, "io_reads": self.io_reads}
+
+    def clear_cache(self) -> None:
+        with self._lock:
+            self._cache.clear()

@@ -1,0 +1,190 @@
+"""In-transit analysis engine (the paper's staging-node role).
+
+``InTransitEngine`` sits between the compute flow and an HDep database:
+compute calls :meth:`submit` (or :meth:`submit_state` for train states)
+and returns immediately; a worker pool drains the staging area, runs the
+reducer DAG and writes each snapshot's reduced objects as one HDep
+context. The engine has its *own* output frequency (``output_every``),
+independent of HProt checkpoint cadence — the paper's "different output
+frequencies" between the protection and post-processing flows.
+
+Contexts written here carry ``attrs["insitu"]`` with the reducer names
+and staging statistics, so a catalog (or a human) can see what was
+reduced and what back-pressure did to the cadence.
+"""
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+
+from ..core.amr import AMRTree
+from ..hercule import hdep
+from ..hercule.database import HerculeDB
+from .reducers import Reducer, ReducerDAG
+from .staging import StagingArea
+
+
+class InTransitEngine:
+    """Worker pool turning staged snapshots into reduced HDep objects."""
+
+    def __init__(self, root: str | HerculeDB, reducers: list[Reducer], *,
+                 output_every: int = 1, workers: int = 1,
+                 queue_capacity: int = 4, policy: str = "drop-oldest",
+                 ncf: int = 4, compress: bool = False):
+        self.db = root if isinstance(root, HerculeDB) else \
+            HerculeDB.create(root, kind="hdep", ncf=ncf)
+        self.dag = ReducerDAG(reducers)
+        self.compress = compress
+        self.output_every = max(1, output_every)
+        self.staging = StagingArea(
+            capacity=queue_capacity, policy=policy,
+            n_buffers=queue_capacity + workers + 1)
+        self._threads = [
+            threading.Thread(target=self._worker, name=f"insitu-{i}",
+                             daemon=True)
+            for i in range(max(1, workers))]
+        self._errors: list[BaseException] = []
+        self._written: list[int] = []
+        self._failed = 0
+        self._skipped = 0          # snapshots no reducer applied to
+        self._wlock = threading.Lock()
+        self._started = False
+
+    # ----------------------------------------------------------- compute side
+    def start(self) -> "InTransitEngine":
+        if not self._started:
+            self._started = True
+            for t in self._threads:
+                t.start()
+        return self
+
+    def submit(self, step: int, payload, *, kind: str = "amr",
+               meta: dict | None = None) -> bool:
+        """Offer one step's state to the analysis flow.
+
+        ``payload`` is an :class:`AMRTree`, or a dict of arrays (device or
+        host). Steps off the engine's output cadence are ignored without
+        staging cost; otherwise the configured backpressure policy
+        decides. Returns True iff the snapshot was staged.
+        """
+        self.check_errors()
+        if not self._started:
+            self.start()
+        if step % self.output_every != 0:
+            return False
+        if isinstance(payload, AMRTree):
+            payload = payload.to_arrays()
+            kind = "amr"
+        return self.staging.push(step, payload, kind=kind, meta=meta)
+
+    def submit_state(self, step: int, state, *, prefix: str = "params"
+                     ) -> bool:
+        """Stage the matrix-shaped leaves of a train-state pytree."""
+        if step % self.output_every != 0:
+            return False   # skip the pytree flatten on off-cadence steps
+        import jax
+
+        from ..hercule.checkpoint import leaf_name
+        sub = state[prefix] if isinstance(state, dict) and prefix in state \
+            else state
+        flat, _ = jax.tree_util.tree_flatten_with_path(sub)
+        arrays = {}
+        for path, leaf in flat:
+            if leaf is None or getattr(leaf, "ndim", 0) < 2:
+                continue
+            arrays[leaf_name(path)] = leaf
+        return self.submit(step, arrays, kind="tensors")
+
+    # ---------------------------------------------------------- analysis side
+    def _worker(self):
+        while True:
+            snap = self.staging.pop(timeout=0.25)
+            if snap is None:
+                if self.staging.closed and len(self.staging) == 0:
+                    return
+                continue
+            try:
+                self._reduce_and_write(snap)
+            except BaseException as e:   # surfaced on next submit/drain
+                self._errors.append(e)
+                with self._wlock:
+                    self._failed += 1
+            finally:
+                self.staging.release(snap)
+
+    def _reduce_and_write(self, snap):
+        outputs = self.dag.run(snap)
+        if not outputs:
+            # no reducer accepted this snapshot kind — don't litter the
+            # database with empty contexts; surface it via stats instead
+            with self._wlock:
+                self._skipped += 1
+            return
+        ctx = self.db.begin_context(snap.step)
+        for rname, arrays in outputs.items():
+            hdep.write_reduced(ctx, 0, rname, arrays,
+                               compress=self.compress)
+        ctx.finalize(attrs={"insitu": {
+            "kind": snap.kind,
+            "reducers": sorted(outputs),
+            "staging": self.staging.stats.as_dict(),
+            **snap.meta,
+        }})
+        with self._wlock:
+            self._written.append(snap.step)
+
+    # ----------------------------------------------------------------- admin
+    @property
+    def written_steps(self) -> list[int]:
+        with self._wlock:
+            return sorted(self._written)
+
+    @property
+    def skipped_snapshots(self) -> int:
+        """Snapshots whose kind no reducer in the DAG accepted."""
+        with self._wlock:
+            return self._skipped
+
+    def check_errors(self) -> None:
+        if self._errors:
+            raise RuntimeError("in-transit reduction failed") \
+                from self._errors[0]
+
+    def drain(self, timeout: float = 60.0) -> None:
+        """Block until every accepted snapshot was reduced (or failed)."""
+        import time
+        deadline = time.perf_counter() + timeout
+        while True:
+            self.check_errors()
+            with self._wlock:
+                done = len(self._written) + self._failed + self._skipped
+            stats = self.staging.stats
+            # accepted snapshots are either still queued/in-flight,
+            # were evicted by drop-oldest, or have been processed
+            if done + stats.evicted >= stats.accepted:
+                return
+            if time.perf_counter() > deadline:
+                raise TimeoutError("in-transit engine did not drain")
+            time.sleep(0.005)
+
+    def close(self, *, drain: bool = True) -> None:
+        err: BaseException | None = None
+        if drain and self._started:
+            try:
+                self.drain()
+            except BaseException as e:
+                err = e
+        self.staging.close()
+        if self._started:
+            for t in self._threads:
+                t.join(timeout=30.0)
+            if any(t.is_alive() for t in self._threads):
+                # never close the db under a still-writing worker — a
+                # leaked daemon thread beats a corrupted context
+                raise TimeoutError(
+                    "in-transit workers did not stop; database left open")
+        self.db.close()
+        if err is not None:
+            raise err
+        self.check_errors()

@@ -1,0 +1,251 @@
+"""Device→host staging area for in-transit analysis (paper fig. 1).
+
+Models Hercule's staging nodes: the compute flow hands a snapshot to the
+staging area and immediately continues; the analysis flow drains it at
+its own pace. Three pieces:
+
+  * **double-buffered host buffers** — a small pool of reusable host-side
+    buffer sets. The push copies device (or live host) arrays into a free
+    buffer set, so compute may mutate its arrays right after ``push``
+    returns and steady-state pushes reuse memory instead of allocating
+    (classic double buffering: one set being filled while others are in
+    flight through the queue/workers).
+  * **bounded queue** — at most ``capacity`` staged snapshots wait for the
+    engine; in-flight snapshots (popped, being reduced) hold their buffer
+    set until :meth:`release`.
+  * **explicit backpressure policy** when the queue (or buffer pool) is
+    full:
+      - ``block``       compute waits for space (lossless, may stall);
+      - ``drop-oldest`` evict the oldest waiting snapshot, accept the new
+        one (viewers always see the freshest data; compute never stalls);
+      - ``subsample``   adaptively decimate the accepted cadence: every
+        overflow doubles the stride between accepted snapshots, sustained
+        slack halves it (compute never stalls, surviving snapshots are
+        evenly spaced in step number).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+import numpy as np
+
+POLICIES = ("block", "drop-oldest", "subsample")
+
+
+def to_host(arrays: dict) -> dict[str, np.ndarray]:
+    """Materialize a dict of arrays (jax or numpy) on the host, no copy."""
+    return {k: np.asarray(v) for k, v in arrays.items()}
+
+
+@dataclasses.dataclass
+class Snapshot:
+    """One staged unit of work: host copies of the arrays of one step."""
+    step: int
+    kind: str                         # "amr" (tree arrays) | "tensors"
+    arrays: dict[str, np.ndarray]
+    meta: dict = dataclasses.field(default_factory=dict)
+    _bufset: "_BufferSet | None" = None
+
+
+class _BufferSet:
+    """One reusable set of host buffers (name -> ndarray)."""
+
+    def __init__(self):
+        self.buffers: dict[str, np.ndarray] = {}
+
+    def fill(self, arrays: dict[str, np.ndarray]):
+        """Copy ``arrays`` in, reusing allocations when shapes match.
+
+        Returns (host arrays, reuses, allocs, bytes) — the caller folds
+        the counters into the shared stats under its own lock.
+        """
+        out = {}
+        reuses = allocs = nbytes = 0
+        for name, src in arrays.items():
+            dst = self.buffers.get(name)
+            if dst is not None and dst.shape == src.shape \
+                    and dst.dtype == src.dtype:
+                np.copyto(dst, src)
+                reuses += 1
+            else:
+                dst = np.array(src, copy=True)
+                self.buffers[name] = dst
+                allocs += 1
+            nbytes += dst.nbytes
+            out[name] = dst
+        # drop buffers for names that disappeared (AMR trees change size)
+        for name in list(self.buffers):
+            if name not in arrays:
+                del self.buffers[name]
+        return out, reuses, allocs, nbytes
+
+
+@dataclasses.dataclass
+class StagingStats:
+    pushed: int = 0
+    accepted: int = 0
+    dropped: int = 0          # incoming snapshots rejected (subsample/full)
+    evicted: int = 0          # queued snapshots displaced (drop-oldest)
+    buffer_reuses: int = 0
+    buffer_allocs: int = 0
+    bytes_staged: int = 0
+    block_seconds: float = 0.0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class StagingArea:
+    """Bounded, policy-governed hand-off between compute and analysis."""
+
+    def __init__(self, *, capacity: int = 4, policy: str = "drop-oldest",
+                 n_buffers: int | None = None):
+        assert policy in POLICIES, policy
+        assert capacity >= 1
+        self.capacity = capacity
+        self.policy = policy
+        # enough sets for every queue slot + one being filled + one being
+        # reduced per consumer; sized generously by the engine.
+        self._free: list[_BufferSet] = [
+            _BufferSet() for _ in range(n_buffers or capacity + 2)]
+        self._queue: list[Snapshot] = []
+        self._lock = threading.Lock()
+        self._not_empty = threading.Condition(self._lock)
+        self._not_full = threading.Condition(self._lock)
+        self._closed = False
+        self._stride = 1              # subsample decimation stride
+        self._slack = 0               # consecutive easy pushes (for decay)
+        self.stats = StagingStats()
+
+    # -------------------------------------------------------------- push
+    def push(self, step: int, arrays: dict, *, kind: str = "amr",
+             meta: dict | None = None) -> bool:
+        """Stage one snapshot; returns False if it was dropped.
+
+        Never blocks unless ``policy == "block"``. The arrays are copied
+        into a pooled host buffer set before return.
+        """
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("staging area is closed")
+            self.stats.pushed += 1
+            if self.policy == "subsample":
+                if step % self._stride != 0:
+                    self.stats.dropped += 1
+                    return False
+            while len(self._queue) >= self.capacity or not self._free:
+                if self.policy == "block":
+                    t0 = time.perf_counter()
+                    self._not_full.wait(timeout=0.5)
+                    self.stats.block_seconds += time.perf_counter() - t0
+                    if self._closed:
+                        raise RuntimeError("staging area is closed")
+                    continue
+                if self.policy == "drop-oldest" and self._queue:
+                    victim = self._queue.pop(0)
+                    self._reclaim(victim)
+                    self.stats.evicted += 1
+                    continue
+                # subsample overflow (or drop-oldest with everything
+                # in-flight): reject the incoming snapshot
+                if self.policy == "subsample":
+                    self._stride = min(self._stride * 2, 1 << 16)
+                    self._slack = 0
+                self.stats.dropped += 1
+                return False
+            if self.policy == "subsample":
+                self._slack += 1
+                if self._stride > 1 and self._slack * 2 > self.capacity:
+                    self._stride //= 2
+                    self._slack = 0
+            bufset = self._free.pop()
+        # the (possibly large) device->host copy runs without the lock so
+        # consumers keep popping/releasing; the buffer set is reserved
+        try:
+            host, reuses, allocs, nbytes = bufset.fill(to_host(arrays))
+        except BaseException:
+            with self._lock:       # failed copy must not leak the pool
+                self._free.append(bufset)
+                self._not_full.notify()
+            raise
+        snap = Snapshot(step=step, kind=kind, arrays=host,
+                        meta=dict(meta or {}), _bufset=bufset)
+        with self._lock:
+            self.stats.buffer_reuses += reuses
+            self.stats.buffer_allocs += allocs
+            self.stats.bytes_staged += nbytes
+            if len(self._queue) >= self.capacity:
+                # another producer filled the queue during our copy
+                if self.policy == "drop-oldest":
+                    victim = self._queue.pop(0)
+                    self._reclaim(victim)
+                    self.stats.evicted += 1
+                elif self.policy != "block":
+                    self._reclaim(snap)
+                    self.stats.dropped += 1
+                    return False
+                else:
+                    while len(self._queue) >= self.capacity:
+                        if self._closed:
+                            self._reclaim(snap)
+                            raise RuntimeError("staging area is closed")
+                        t0 = time.perf_counter()
+                        self._not_full.wait(timeout=0.5)
+                        self.stats.block_seconds += \
+                            time.perf_counter() - t0
+            self._queue.append(snap)
+            self.stats.accepted += 1
+            self._not_empty.notify()
+            return True
+
+    # --------------------------------------------------------------- pop
+    def pop(self, timeout: float | None = None) -> Snapshot | None:
+        """Take the oldest staged snapshot; None on timeout/close."""
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        with self._lock:
+            while not self._queue:
+                if self._closed:
+                    return None
+                remaining = None if deadline is None else \
+                    deadline - time.perf_counter()
+                if remaining is not None and remaining <= 0:
+                    return None
+                self._not_empty.wait(timeout=remaining if remaining is not None
+                                     else 0.5)
+            snap = self._queue.pop(0)
+            # a queue slot opened up for block-policy producers; the
+            # buffer set stays owned by the snapshot until release()
+            self._not_full.notify()
+            return snap
+
+    def release(self, snap: Snapshot) -> None:
+        """Return a popped snapshot's buffer set to the pool."""
+        if snap._bufset is None:
+            return
+        with self._lock:
+            self._free.append(snap._bufset)
+            snap._bufset = None
+            self._not_full.notify()
+
+    def _reclaim(self, snap: Snapshot) -> None:
+        # caller holds the lock
+        if snap._bufset is not None:
+            self._free.append(snap._bufset)
+            snap._bufset = None
+
+    # ------------------------------------------------------------- admin
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._queue)
+
+    def close(self) -> None:
+        with self._lock:
+            self._closed = True
+            self._not_empty.notify_all()
+            self._not_full.notify_all()
+
+    @property
+    def closed(self) -> bool:
+        return self._closed

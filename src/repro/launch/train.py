@@ -31,6 +31,11 @@ def main(argv=None):
                    help="Hercule contributors per file")
     p.add_argument("--hdep-dir", default=None)
     p.add_argument("--hdep-every", type=int, default=0)
+    p.add_argument("--insitu-dir", default=None,
+                   help="in-transit reduced HDep output (repro.insitu)")
+    p.add_argument("--insitu-every", type=int, default=0)
+    p.add_argument("--insitu-policy", default="drop-oldest",
+                   choices=["block", "drop-oldest", "subsample"])
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
@@ -45,6 +50,8 @@ def main(argv=None):
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
         ckpt_mode=args.ckpt_mode, ncf=args.ncf,
         hdep_dir=args.hdep_dir, hdep_every=args.hdep_every,
+        insitu_dir=args.insitu_dir, insitu_every=args.insitu_every,
+        insitu_policy=args.insitu_policy,
         seed=args.seed)
     trainer.run(args.steps)
     return 0

@@ -7,6 +7,7 @@ cost the steps since the last checkpoint. Exercised by
 """
 from __future__ import annotations
 
+import os
 import subprocess
 import sys
 
@@ -20,7 +21,6 @@ def run_supervised(cmd: list[str], *, max_restarts: int = 5,
     trigger that models a one-off node failure).
     Returns (final_returncode, restarts_used).
     """
-    import os
     restarts = 0
     while True:
         extra = env_first if restarts == 0 else None

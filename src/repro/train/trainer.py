@@ -56,7 +56,9 @@ class Trainer:
                  ckpt_dir: str = "/tmp/hx_ckpt", ckpt_every: int = 50,
                  ckpt_mode: str = "raw", ncf: int = 8,
                  seed: int = 0, log_every: int = 10,
-                 hdep_dir: str | None = None, hdep_every: int = 0):
+                 hdep_dir: str | None = None, hdep_every: int = 0,
+                 insitu_dir: str | None = None, insitu_every: int = 0,
+                 insitu_reducers=None, insitu_policy: str = "drop-oldest"):
         self.lm = lm
         self.cfg = lm.cfg
         self.opt_cfg = opt_cfg or optim.OptConfig()
@@ -71,6 +73,15 @@ class Trainer:
         if hdep_dir and hdep_every:
             from ..hercule.database import HerculeDB
             self.hdep = HerculeDB.create(hdep_dir, kind="hdep", ncf=ncf)
+        self.insitu = None
+        if insitu_dir and insitu_every:
+            from ..insitu import (InTransitEngine, SpectraReducer,
+                                  TensorNormReducer)
+            reducers = insitu_reducers if insitu_reducers is not None else \
+                [TensorNormReducer(), SpectraReducer(k=8)]
+            self.insitu = InTransitEngine(
+                insitu_dir, reducers, output_every=insitu_every,
+                policy=insitu_policy, ncf=ncf)
         self.monitor = StragglerMonitor()
         self.seed = seed
         self._stop = False
@@ -130,22 +141,29 @@ class Trainer:
                                attrs={"loss": metrics["loss"]})
             if self.hdep is not None and (s + 1) % self.hdep_every == 0:
                 self._dump_analysis(s + 1, state)
+            if self.insitu is not None:
+                # in-transit flow: engine decides cadence + backpressure;
+                # compute never stalls under a non-blocking policy
+                self.insitu.submit_state(s + 1, state)
             if self._stop:
                 print(f"signal received: checkpointed at step {s+1}, exiting",
                       flush=True)
                 break
         self.ckpt.wait()
         self.ckpt.close()
+        if self.insitu is not None:
+            self.insitu.close()
         return state
 
     def _dump_analysis(self, step: int, state):
         """HDep flow at its own frequency (paper fig. 1)."""
         from ..hercule import hdep as hdep_mod
+        from ..hercule.checkpoint import leaf_name
         ctx = self.hdep.begin_context(step)
         flat, _ = jax.tree_util.tree_flatten_with_path(state["params"])
         stats = {}
         for path, leaf in flat:
-            name = jax.tree_util.keystr(path).strip("'[]").replace("']['", ".")
+            name = leaf_name(path)
             arr = np.asarray(leaf)
             if arr.ndim >= 2:
                 stats[name] = arr

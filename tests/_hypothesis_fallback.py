@@ -1,0 +1,96 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The property tests in this suite only use ``@settings``, ``@given`` and
+three strategies (integers, booleans, lists-of-booleans). When hypothesis
+is available the real package is used (see the try/except in the test
+modules); otherwise these shims replay a small fixed set of examples so
+the properties are still exercised — fewer cases, same assertions.
+"""
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+
+_MAX_CASES = 20
+
+
+def settings(**_kw):
+    def deco(fn):
+        return fn
+    return deco
+
+
+class _Strategy:
+    """A strategy is just a finite list of example values here."""
+
+    def __init__(self, examples):
+        self.examples = list(examples)
+
+
+class strategies:  # mirrors `from hypothesis import strategies as st`
+    @staticmethod
+    def integers(lo: int, hi: int) -> _Strategy:
+        span = hi - lo
+        picks = sorted({lo, hi, lo + span // 2, lo + span // 3,
+                        lo + 1 if span else lo, lo + 7 % (span + 1)})
+        return _Strategy(picks)
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy([False, True])
+
+    @staticmethod
+    def floats(allow_nan: bool = True, width: int = 64,
+               **_kw) -> _Strategy:
+        picks = [0.0, -0.0, 1.0, -1.5, 3.141592653589793, 1e-3,
+                 -123456.789, 1e30, -1e30, 5e-324, float("inf"),
+                 float("-inf")]
+        if allow_nan:
+            picks.append(float("nan"))
+        return _Strategy(picks)
+
+    @staticmethod
+    def sampled_from(values) -> _Strategy:
+        return _Strategy(values)
+
+    @staticmethod
+    def tuples(*strats: _Strategy) -> _Strategy:
+        rng = np.random.default_rng(99)
+        out = []
+        for _ in range(8):
+            out.append(tuple(s.examples[rng.integers(0, len(s.examples))]
+                             for s in strats))
+        return _Strategy(out)
+
+    @staticmethod
+    def lists(elem: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        rng = np.random.default_rng(1234)
+        sizes = sorted({min_size, max_size,
+                        min(max_size, min_size + 1),
+                        (min_size + max_size) // 2,
+                        (min_size + max_size) // 7 or min_size})
+        out = []
+        for n in sizes:
+            if n < min_size or n > max_size:
+                continue
+            idx = rng.integers(0, len(elem.examples), size=n)
+            out.append([elem.examples[i] for i in idx])
+        return _Strategy(out)
+
+
+def given(*strats: _Strategy):
+    cases = list(itertools.islice(
+        itertools.product(*(s.examples for s in strats)), _MAX_CASES))
+
+    def deco(fn):
+        # no functools.wraps: pytest must see the zero-arg signature, not
+        # the wrapped one (strategy args would look like missing fixtures)
+        def runner():
+            for case in cases:
+                fn(*case)
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        return runner
+    return deco

@@ -1,6 +1,10 @@
 """Boolean RLE base-52 codec + Hilbert curve properties."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # fall back to fixed-example replay (tests/_hypothesis_fallback.py)
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import boolcodec as bc, hilbert as hb
 

@@ -1,7 +1,10 @@
 """Father-son FP delta codec: exactness (incl. specials), rates, trees."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # fall back to fixed-example replay (tests/_hypothesis_fallback.py)
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import fpdelta, pyramid
 

@@ -1,0 +1,252 @@
+"""In-transit analysis engine: staging backpressure, reducer DAG,
+reduced-HDep round trips, catalog caching, and end-to-end parity with
+post-hoc analysis (the acceptance criteria of the in-situ subsystem)."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import decompose, prune
+from repro.hercule import HerculeDB, analysis, hdep
+from repro.insitu import (Catalog, InTransitEngine, LevelHistogramReducer,
+                          LODCutReducer, ProjectionReducer, Reducer,
+                          ReducerDAG, SliceReducer, StagingArea,
+                          TensorNormReducer)
+from repro.sim import amrgen, fields
+
+
+@pytest.fixture(scope="module")
+def sedov_tree():
+    t = amrgen.generate_tree(fields.sedov(), min_level=2, max_level=5,
+                             threshold=1.2)
+    t.validate()
+    return t
+
+
+# ------------------------------------------------------------------ staging
+
+def test_staging_block_policy_roundtrip():
+    st = StagingArea(capacity=2, policy="block")
+    assert st.push(1, {"a": np.arange(5)})
+    assert st.push(2, {"a": np.arange(5) * 2})
+    snap = st.pop(timeout=1.0)
+    assert snap.step == 1
+    np.testing.assert_array_equal(snap.arrays["a"], np.arange(5))
+    st.release(snap)
+    st.close()
+
+
+def test_staging_push_copies_arrays():
+    """Compute may mutate its arrays right after push (staged copy)."""
+    st = StagingArea(capacity=2)
+    a = np.arange(8.0)
+    st.push(1, {"a": a})
+    a[:] = -1
+    snap = st.pop(timeout=1.0)
+    np.testing.assert_array_equal(snap.arrays["a"], np.arange(8.0))
+    st.release(snap)
+    st.close()
+
+
+def test_staging_drop_oldest_keeps_freshest():
+    st = StagingArea(capacity=2, policy="drop-oldest")
+    for s in range(1, 6):
+        assert st.push(s, {"a": np.full(4, s)})
+    assert len(st) == 2
+    assert st.stats.evicted == 3
+    snaps = [st.pop(timeout=1.0), st.pop(timeout=1.0)]
+    assert [s.step for s in snaps] == [4, 5]
+    for s in snaps:
+        st.release(s)
+    st.close()
+
+
+def test_staging_subsample_decimates_under_pressure():
+    st = StagingArea(capacity=2, policy="subsample")
+    accepted = [s for s in range(1, 41) if st.push(s, {"a": np.zeros(2)})]
+    # queue never drained -> overflows double the stride; only a few land
+    assert st.stats.dropped > 0
+    assert len(accepted) < 10
+    st.close()
+
+
+def test_staging_double_buffer_reuse():
+    st = StagingArea(capacity=1, policy="drop-oldest")
+    for s in range(10):
+        st.push(s, {"a": np.zeros(100), "b": np.ones(50)})
+    # stable shapes: allocations bounded by pool size, rest are reuses
+    assert st.stats.buffer_allocs <= 2 * 3   # <= pool sets * arrays
+    assert st.stats.buffer_reuses > 0
+    st.close()
+
+
+# --------------------------------------------------------------------- DAG
+
+def test_dag_topo_order_and_validation():
+    lod = LODCutReducer(max_level=3)
+    s = SliceReducer(resolution=32, source="lod3")
+    dag = ReducerDAG([s, lod])           # order given reversed on purpose
+    assert dag.names().index("lod3") < dag.names().index(s.name)
+    with pytest.raises(ValueError, match="unknown"):
+        ReducerDAG([SliceReducer(resolution=16, source="nope")])
+    with pytest.raises(ValueError, match="duplicate"):
+        ReducerDAG([LODCutReducer(max_level=3), LODCutReducer(max_level=3)])
+
+
+def test_lod_cut_is_valid_coarse_tree(sedov_tree):
+    from repro.insitu.reducers import tree_of
+    from repro.insitu.staging import Snapshot
+    snap = Snapshot(step=0, kind="amr", arrays=sedov_tree.to_arrays())
+    out = LODCutReducer(max_level=2).reduce(snap, {})
+    cut = tree_of(out)
+    cut.validate()
+    assert cut.n_levels <= 3
+    # the cut's coarse values are the restriction already present upstream
+    np.testing.assert_array_equal(
+        cut.fields["density"][:1], sedov_tree.fields["density"][:1])
+
+
+# ------------------------------------------------------- reduced HDep flavor
+
+def test_write_read_reduced_roundtrip(tmp_path):
+    db = HerculeDB.create(str(tmp_path / "db"), kind="hdep", ncf=2)
+    ctx = db.begin_context(3)
+    rng = np.random.default_rng(0)
+    arrays = {"image": rng.standard_normal((64, 64)),
+              "edges": np.linspace(0, 1, 33),
+              "hist": rng.integers(0, 100, (5, 32))}
+    hdep.write_reduced(ctx, 0, "myred", arrays)
+    ctx.finalize()
+    out = hdep.read_reduced(db, 3, "myred")
+    for k, v in arrays.items():
+        np.testing.assert_array_equal(out[k], v)
+    assert hdep.reducers_in(db, 3) == ["myred"]
+    with pytest.raises(KeyError):
+        hdep.read_reduced(db, 3, "absent")
+
+
+# ------------------------------------------------- acceptance criteria (a-c)
+
+def test_compute_never_blocks_under_drop_oldest(tmp_path):
+    """(a) slow reducers + drop-oldest: the compute loop keeps its pace."""
+    sleep_s = 0.1
+
+    class Slow(Reducer):
+        name = "slow"
+
+        def reduce(self, snap, upstream):
+            time.sleep(sleep_s)
+            return {"x": np.array([float(snap.step)])}
+
+    eng = InTransitEngine(str(tmp_path / "db"), [Slow()],
+                          queue_capacity=2, policy="drop-oldest").start()
+    n = 30
+    t0 = time.perf_counter()
+    for s in range(1, n + 1):
+        eng.submit(s, {"a": np.zeros(1000)}, kind="amr")
+    push_time = time.perf_counter() - t0
+    # reducing everything would take n * sleep_s; pushes must not wait
+    assert push_time < n * sleep_s / 4, push_time
+    stats = eng.staging.stats
+    assert stats.accepted == n
+    assert stats.evicted > 0                 # backpressure did engage
+    eng.close()
+    # freshest snapshot always survives drop-oldest
+    assert n in eng.written_steps
+    assert len(eng.written_steps) == stats.accepted - stats.evicted
+
+
+def test_insitu_slice_matches_posthoc_and_cache(tmp_path, sedov_tree):
+    """(b) in-transit slice == post-hoc slice over assembled domain trees;
+    (c) repeated catalog query is served from cache, no re-read."""
+    tree = sedov_tree
+    # post-hoc path: domain-decomposed, pruned, written as full HDep objects
+    dom = decompose.assign_domains(tree, 4)
+    full_db = HerculeDB.create(str(tmp_path / "full"), kind="hdep", ncf=2)
+    ctx = full_db.begin_context(7)
+    for d in range(4):
+        lt = decompose.local_tree(tree, dom, d, coarse_level=1)
+        hdep.write_domain_tree(ctx, d, prune.prune(lt))
+    ctx.finalize()
+    posthoc = analysis.slice_image(analysis.load_global_tree(full_db, 7),
+                                   "density", axis=2, position=0.5,
+                                   resolution=64)
+
+    # in-transit path: the same state reduced at the staging node
+    slicer = SliceReducer(field="density", axis=2, position=0.5,
+                          resolution=64)
+    eng = InTransitEngine(str(tmp_path / "red"),
+                          [slicer, ProjectionReducer(resolution=32),
+                           LevelHistogramReducer()],
+                          policy="drop-oldest").start()
+    assert eng.submit(7, tree)
+    eng.close()
+
+    cat = Catalog(str(tmp_path / "red"))
+    assert cat.steps() == [7]
+    img = cat.query(7, slicer.name)["image"]
+    np.testing.assert_array_equal(img, posthoc)
+
+    # (c) cache: second query (and a region crop of it) re-reads nothing
+    reads_after_first = cat.io_reads
+    again = cat.query(7, slicer.name)["image"]
+    window = cat.query(7, slicer.name, region=((8, 24), (8, 24)))["image"]
+    assert cat.io_reads == reads_after_first
+    assert cat.cache_hits >= 2
+    np.testing.assert_array_equal(again, img)
+    np.testing.assert_array_equal(window, img[8:24, 8:24])
+
+
+def test_engine_output_frequency_independent(tmp_path, sedov_tree):
+    eng = InTransitEngine(str(tmp_path / "db"),
+                          [LevelHistogramReducer()], output_every=3).start()
+    for s in range(1, 10):
+        eng.submit(s, sedov_tree)
+    eng.close()
+    assert eng.written_steps == [3, 6, 9]
+    assert Catalog(str(tmp_path / "db")).steps() == [3, 6, 9]
+
+
+def test_engine_dag_slice_of_lod(tmp_path, sedov_tree):
+    """A dependent reducer (slice of the LOD cut) runs after its upstream
+    and its coarse image agrees with slicing the cut directly."""
+    from repro.insitu.reducers import tree_of
+    lod = LODCutReducer(max_level=2)
+    s_of = SliceReducer(field="density", resolution=32, source="lod2")
+    eng = InTransitEngine(str(tmp_path / "db"), [s_of, lod]).start()
+    assert eng.submit(1, sedov_tree)
+    eng.close()
+    cat = Catalog(str(tmp_path / "db"))
+    cut = tree_of(cat.query(1, "lod2"))
+    want = analysis.slice_image(cut, "density", axis=2, position=0.5,
+                                resolution=32)
+    got = cat.query(1, s_of.name)["image"]
+    np.testing.assert_array_equal(got, want)
+
+
+def test_engine_tensor_flow(tmp_path):
+    import jax.numpy as jnp
+    state = {"params": {"w": jnp.arange(256, dtype=jnp.float32
+                                        ).reshape(16, 16) / 256.0,
+                        "bias": jnp.ones(4)}}
+    eng = InTransitEngine(str(tmp_path / "db"), [TensorNormReducer()]).start()
+    assert eng.submit_state(2, state)
+    eng.close()
+    out = Catalog(str(tmp_path / "db")).query(2, "tnorm")
+    assert list(out["names"]) == ["w"]       # bias is not matrix-shaped
+    w = np.arange(256, dtype=np.float32).reshape(16, 16) / 256.0
+    np.testing.assert_allclose(out["stats"][0, 0],
+                               np.linalg.norm(w.ravel()), rtol=1e-6)
+
+
+def test_engine_surfaces_reducer_errors(tmp_path):
+    class Boom(Reducer):
+        name = "boom"
+
+        def reduce(self, snap, upstream):
+            raise RuntimeError("kaput")
+
+    eng = InTransitEngine(str(tmp_path / "db"), [Boom()]).start()
+    eng.submit(1, {"a": np.zeros(4)}, kind="amr")
+    with pytest.raises(RuntimeError, match="in-transit"):
+        eng.close()
