@@ -13,7 +13,7 @@ import time
 
 import numpy as np
 
-from repro.hercule import HerculeDB, analysis, hdep
+from repro.hercule import HerculeDB, analysis, api
 from repro.insitu import Catalog, InTransitEngine, SliceReducer
 
 from .common import emit, orion_domains, timeit
@@ -61,7 +61,7 @@ def run(n_domains: int = 16, steps: int = 8):
     db = HerculeDB.create(full_root, kind="hdep", ncf=4)
     ctx = db.begin_context(0)
     for d, pt in enumerate(pruned):
-        hdep.write_domain_tree(ctx, d, pt)
+        api.write_object(ctx, "amr_tree", d, pt)
     ctx.finalize()
 
     def posthoc_slice():

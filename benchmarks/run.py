@@ -12,12 +12,12 @@ import traceback
 def main() -> int:
     print("name,us_per_call,derived")
     failures = []
-    from . import (bench_boolcodec, bench_checkpoint, bench_fpdelta,
-                   bench_insitu, bench_io_scaling, bench_pruning,
-                   bench_roofline)
+    from . import (bench_api, bench_boolcodec, bench_checkpoint,
+                   bench_fpdelta, bench_insitu, bench_io_scaling,
+                   bench_pruning, bench_roofline)
     for mod in (bench_pruning, bench_boolcodec, bench_fpdelta,
-                bench_io_scaling, bench_checkpoint, bench_insitu,
-                bench_roofline):
+                bench_io_scaling, bench_api, bench_checkpoint,
+                bench_insitu, bench_roofline):
         try:
             mod.run()
         except Exception:  # noqa: BLE001

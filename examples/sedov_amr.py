@@ -20,7 +20,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 
 from repro.core import decompose, prune
-from repro.hercule import HerculeDB, analysis, hdep
+from repro.hercule import HerculeDB, analysis, api
 from repro.sim import amrgen, fields
 
 ROOT = "/tmp/hx_sedov_hdep"
@@ -71,7 +71,7 @@ def main():
         lt = decompose.local_tree(tree, dom, d, coarse_level=3, index=index)
         pt = prune.prune(lt)
         removed = prune.removed_fraction(lt, pt)
-        hdep.write_domain_tree(ctx, d, pt)
+        api.write_object(ctx, "amr_tree", d, pt)
         raw_bytes += lt.n_nodes * (1 + 1 + 8 * len(lt.fields))
         print(f"   domain {d}: {lt.n_nodes} -> {pt.n_nodes} nodes "
               f"({removed*100:.1f} % pruned)")

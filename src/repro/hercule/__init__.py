@@ -8,5 +8,14 @@ Two database kinds, written at independent frequencies (fig. 1):
 Shared machinery in :mod:`database`: *contexts* (one per time step /
 checkpoint step), *domains* (one per contributor), contributor groups of
 NCF processes sharing one physical file, and max-file-size rollover.
+
+The unified object layer lives in :mod:`api`: typed ObjectKinds
+(``amr_tree`` / ``analysis`` / ``reduced`` / ``ckpt_shard``), a codec
+registry, indexed :class:`~repro.hercule.api.ContextView` handles and the
+shared :class:`~repro.hercule.api.Selector` query object (DESIGN.md §11).
 """
-from .database import HerculeDB, ContextWriter  # noqa: F401
+from . import api  # noqa: F401  (registers object kinds + fpdelta codecs)
+from .api import (ContextView, Selector, read_object, scan,  # noqa: F401
+                  write_object)
+from .database import (ContextWriter, HerculeDB, Record,  # noqa: F401
+                       codec_names, decode_record, register_codec)

@@ -11,7 +11,7 @@ from __future__ import annotations
 import numpy as np
 
 from ..core.amr import AMRTree, morton3
-from . import hdep
+from . import api
 from .database import HerculeDB
 
 
@@ -25,13 +25,13 @@ def assemble(trees: list[AMRTree]) -> AMRTree:
     n_levels = max(t.n_levels for t in trees)
     fields = sorted({f for t in trees for f in t.fields})
     out_refine, out_coords, out_fields = [], [], {f: [] for f in fields}
-    for l in range(n_levels):
+    for lvl in range(n_levels):
         codes_l, ref_l, own_l, coords_l = [], [], [], []
         fields_l = {f: [] for f in fields}
         for t in trees:
-            if l >= t.n_levels:
+            if lvl >= t.n_levels:
                 continue
-            sl = t.level_slice(l)
+            sl = t.level_slice(lvl)
             if sl.start == sl.stop:
                 continue
             codes_l.append(morton3(t.coords[sl]))
@@ -80,8 +80,9 @@ def assemble(trees: list[AMRTree]) -> AMRTree:
 
 
 def load_global_tree(db: HerculeDB, step: int) -> AMRTree:
-    doms = hdep.domains_in(db, step)
-    return assemble([hdep.read_domain_tree(db, step, d) for d in doms])
+    view = db.view(step)
+    return assemble([api.AMR_TREE.assemble(view, d)
+                     for d in api.AMR_TREE.domains_in(view)])
 
 
 def threshold(tree: AMRTree, field: str, lo: float = -np.inf,
@@ -108,11 +109,11 @@ def slice_image(tree: AMRTree, field: str, *, axis: int = 2,
     v = tree.fields[field]
     leaves = np.flatnonzero(~tree.refine)
     ax_u, ax_v = [a for a in range(3) if a != axis]
-    for l in range(tree.n_levels):
-        sel = leaves[levels[leaves] == l]
+    for lvl in range(tree.n_levels):
+        sel = leaves[levels[leaves] == lvl]
         if sel.size == 0:
             continue
-        size = 1.0 / (1 << l)
+        size = 1.0 / (1 << lvl)
         c = tree.coords[sel]
         lo_w = c[:, axis] * size
         hit = (lo_w <= position) & (position < lo_w + size)
@@ -126,5 +127,5 @@ def slice_image(tree: AMRTree, field: str, *, axis: int = 2,
         for i, node in enumerate(sel):
             uu, vv = u0[i], v0[i]
             img[uu:uu + px, vv:vv + px] = v[node]
-            depth[uu:uu + px, vv:vv + px] = l
+            depth[uu:uu + px, vv:vv + px] = lvl
     return img

@@ -1,0 +1,559 @@
+"""Unified Hercule object API: typed kinds, indexed views, selectors.
+
+The paper's formats stay useful because every object is *self-describing
+and uniformly addressable*; this module is the single data-access layer
+the writers, the in-transit reducers and the viewers all share:
+
+  * **ObjectKind registry** — each object flavor (``amr_tree``,
+    ``analysis``, ``reduced``, ``ckpt_shard``) declares its record naming
+    schema, its write codecs and its assembly logic. Record-name dispatch
+    happens here, once, instead of ``startswith(...)`` chains scattered
+    through readers.
+  * **ContextView** — an indexed handle over one finalized context. The
+    manifest is parsed exactly once (views are cached on the database);
+    point reads are hash lookups, batched reads fan out on the database's
+    ``io_threads`` pool, and domain-merged reads gather one name across
+    contributors.
+  * **Selector** — one query object (step ranges, name globs, domain
+    sets, kind filters) understood by every read flow: the catalog,
+    analysis readers, elastic restore and the :func:`scan` iterator.
+
+Name patterns: a ``names`` entry containing ``*`` or ``?`` is a glob
+(``fnmatch`` semantics); anything else is an exact match — checkpoint
+record names contain ``[``/``]`` from pytree key paths, which must never
+be read as character classes.
+
+Legacy free functions (``hdep.read_domain_tree`` & co.) remain as thin
+deprecation shims over this module; see DESIGN.md §11 for the migration
+table and deprecation policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+
+import numpy as np
+
+from . import codecs
+from .database import (HerculeDB, Record, _dtype_of, decode_record,
+                       get_codec)
+
+__all__ = [
+    "Selector", "as_selector", "ContextView", "ObjectKind", "KINDS",
+    "register_kind", "kind_of", "scan", "RecordRef", "read_object",
+    "write_object",
+]
+
+
+# ---------------------------------------------------------------- selector
+
+def _has_glob(pattern: str) -> bool:
+    return "*" in pattern or "?" in pattern
+
+
+def _glob_match(name: str, pattern: str) -> bool:
+    """fnmatch honoring only ``*``/``?`` — never ``[...]`` classes.
+
+    Record names carry literal brackets from pytree key paths
+    (``['params']['w']``); escaping ``[`` keeps a pattern like
+    ``analysis/['dense']*`` matching those names literally.
+    """
+    return fnmatch.fnmatchcase(name, pattern.replace("[", "[[]"))
+
+
+def _name_tuple(x) -> tuple[str, ...] | None:
+    if x is None:
+        return None
+    if isinstance(x, str):
+        return (x,)
+    return tuple(str(n) for n in x)
+
+
+@dataclasses.dataclass(frozen=True)
+class Selector:
+    """Uniform query over Hercule records.
+
+    ``steps``: an int, a ``range``, or an iterable of ints (None = all).
+    ``names``: glob pattern(s) or exact record name(s) (None = all).
+    ``domains``: an int or iterable of ints (None = all).
+    ``kinds``: ObjectKind name(s) from :data:`KINDS` (None = all).
+    """
+    steps: object = None
+    names: object = None
+    domains: object = None
+    kinds: object = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "names", _name_tuple(self.names))
+        if self.domains is not None and not isinstance(self.domains, frozenset):
+            doms = (self.domains,) if isinstance(self.domains, int) \
+                else self.domains
+            object.__setattr__(self, "domains",
+                               frozenset(int(d) for d in doms))
+        kinds = self.kinds
+        if kinds is not None:
+            kinds = (kinds,) if isinstance(kinds, str) else tuple(kinds)
+            unknown = [k for k in kinds if k not in KINDS]
+            if unknown:
+                raise ValueError(f"unknown object kind(s) {unknown}; "
+                                 f"registered: {sorted(KINDS)}")
+            object.__setattr__(self, "kinds", frozenset(kinds))
+        if isinstance(self.steps, (int, np.integer)):
+            object.__setattr__(self, "steps", (int(self.steps),))
+        elif self.steps is not None and not isinstance(self.steps, range):
+            object.__setattr__(self, "steps",
+                               frozenset(int(s) for s in self.steps))
+
+    # ---------------------------------------------------------- predicates
+    def match_step(self, step: int) -> bool:
+        return self.steps is None or step in self.steps
+
+    def match_name(self, name: str) -> bool:
+        if self.names is None:
+            return True
+        return any(_glob_match(name, p) if _has_glob(p)
+                   else name == p for p in self.names)
+
+    def match(self, rec: Record) -> bool:
+        if self.domains is not None and rec.domain not in self.domains:
+            return False
+        if not self.match_name(rec.name):
+            return False
+        if self.kinds is not None and kind_of(rec.name).name not in self.kinds:
+            return False
+        return True
+
+
+def as_selector(selector=None, **kw) -> Selector:
+    """Coerce ``(selector | keyword fields)`` into one Selector."""
+    if selector is None:
+        return Selector(**kw)
+    if not isinstance(selector, Selector):
+        raise TypeError(f"expected Selector, got {type(selector).__name__}")
+    if kw:
+        return dataclasses.replace(selector, **kw)
+    return selector
+
+
+# ------------------------------------------------------------ context view
+
+class ContextView:
+    """Indexed read handle over one finalized context.
+
+    Obtained from :meth:`HerculeDB.view`; the manifest is parsed once and
+    hash indexes over ``(domain, name)``, ``name`` and ``domain`` are
+    built so repeated reads never re-parse or linearly scan the record
+    list. Contexts are immutable once finalized, so views never go stale.
+    """
+
+    def __init__(self, db: HerculeDB, step: int):
+        self.db = db
+        self.step = int(step)
+        idx = db.load_index(step)
+        self.attrs: dict = idx["attrs"]
+        self.records: list[Record] = idx["records"]
+        self._by_key: dict[tuple[int, str], Record] = {}
+        self._by_name: dict[str, list[Record]] = {}
+        self._by_domain: dict[int, list[Record]] = {}
+        for rec in self.records:
+            self._by_key[(rec.domain, rec.name)] = rec
+            self._by_name.setdefault(rec.name, []).append(rec)
+            self._by_domain.setdefault(rec.domain, []).append(rec)
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+    def __repr__(self) -> str:
+        return (f"ContextView(step={self.step}, records={len(self.records)}, "
+                f"domains={len(self._by_domain)})")
+
+    # ------------------------------------------------------------- lookup
+    def record(self, domain: int, name: str) -> Record:
+        try:
+            return self._by_key[(domain, name)]
+        except KeyError:
+            raise KeyError(
+                f"({domain}, {name}) not in context {self.step}") from None
+
+    def records_named(self, name: str) -> list[Record]:
+        """All domains' records for one exact name (manifest order)."""
+        return list(self._by_name.get(name, ()))
+
+    def names(self) -> list[str]:
+        return sorted(self._by_name)
+
+    def domains(self, name: str | None = None) -> list[int]:
+        if name is None:
+            return sorted(self._by_domain)
+        return sorted(r.domain for r in self._by_name.get(name, ()))
+
+    def kinds(self) -> list[str]:
+        """ObjectKind names present in this context."""
+        return sorted({kind_of(n).name for n in self._by_name})
+
+    def select(self, selector: Selector | None = None, **kw) -> list[Record]:
+        sel = as_selector(selector, **kw)
+        if sel.names is not None and sel.domains is None and \
+                all(not _has_glob(p) for p in sel.names):
+            recs = [r for p in sel.names for r in self._by_name.get(p, ())]
+        elif sel.domains is not None and sel.names is None:
+            recs = [r for d in sorted(sel.domains)
+                    for r in self._by_domain.get(d, ())]
+        else:
+            recs = self.records
+        return [r for r in recs if sel.match(r)]
+
+    # ------------------------------------------------------------- reading
+    def read_record(self, rec: Record) -> np.ndarray:
+        return decode_record(self.db, rec)
+
+    def read(self, domain: int, name: str) -> np.ndarray:
+        """Point read: hash lookup + decode, no manifest re-parse."""
+        return self.read_record(self.record(domain, name))
+
+    #: below this aggregate payload size, pool dispatch costs more than the
+    #: decode itself (tiny records are GIL-bound); read sequentially
+    PARALLEL_MIN_BYTES = 1 << 20
+
+    def read_records(self, recs: list[Record]) -> list[np.ndarray]:
+        """Decode a batch, fanning out on the db's read pool when it pays."""
+        if len(recs) <= 1 or self.db.io_threads <= 1 or \
+                sum(r.nbytes for r in recs) < self.PARALLEL_MIN_BYTES:
+            return [self.read_record(r) for r in recs]
+        pool = self.db._reader_pool()
+        return list(pool.map(self.read_record, recs))
+
+    def read_many(self, items=None, /, selector: Selector | None = None,
+                  **kw) -> dict[tuple[int, str], np.ndarray]:
+        """Batched multi-record read.
+
+        ``items`` is an iterable of ``(domain, name)`` pairs; alternatively
+        pass a :class:`Selector` (or its keyword fields). Decodes run on
+        the database's ``io_threads`` pool.
+        """
+        if items is not None:
+            recs = [self.record(d, n) for d, n in items]
+        else:
+            recs = self.select(selector, **kw)
+        arrays = self.read_records(recs)
+        return {(r.domain, r.name): a for r, a in zip(recs, arrays)}
+
+    def read_merged(self, name: str, domains=None
+                    ) -> dict[int, np.ndarray]:
+        """Domain-merged read: one name across contributors.
+
+        Returns ``{domain: array}`` for every (selected) domain holding
+        ``name``, decoded in parallel — the building block for merged
+        multi-domain reductions.
+        """
+        recs = self.records_named(name)
+        if domains is not None:
+            want = {int(d) for d in domains}
+            recs = [r for r in recs if r.domain in want]
+        arrays = self.read_records(recs)
+        return {r.domain: a for r, a in zip(recs, arrays)}
+
+
+# ------------------------------------------------------------ object kinds
+
+class ObjectKind:
+    """One Hercule object flavor: naming schema + codecs + assembly."""
+
+    #: registry key and default ``kind`` filter value
+    name: str = ""
+    #: record-name prefix owned by this kind ("" = fallback)
+    prefix: str = ""
+
+    def match(self, record_name: str) -> bool:
+        return bool(self.prefix) and record_name.startswith(self.prefix)
+
+    def parse(self, record_name: str) -> dict:
+        """Split a record name into its schema components."""
+        return {"name": record_name}
+
+    def write(self, ctx, domain: int, payload, **opts) -> None:
+        raise NotImplementedError(f"kind {self.name!r} has no writer")
+
+    def assemble(self, view: ContextView, domain: int = 0, **opts):
+        raise NotImplementedError(f"kind {self.name!r} has no assembler")
+
+
+KINDS: dict[str, ObjectKind] = {}
+_FALLBACK_KIND: list[ObjectKind] = []
+
+
+def register_kind(kind: ObjectKind, *, fallback: bool = False) -> ObjectKind:
+    """Register an ObjectKind; ``fallback=True`` marks the catch-all."""
+    KINDS[kind.name] = kind
+    if fallback:
+        _FALLBACK_KIND[:] = [kind]
+    return kind
+
+
+def kind_of(record_name: str) -> ObjectKind:
+    """Classify a record name (falls back to the catch-all kind)."""
+    for kind in KINDS.values():
+        if kind.match(record_name):
+            return kind
+    if _FALLBACK_KIND:
+        return _FALLBACK_KIND[0]
+    raise ValueError(f"no object kind matches record {record_name!r}")
+
+
+def _write_maybe_compressed(ctx, domain: int, name: str, arr: np.ndarray,
+                            compress: bool) -> None:
+    """Write one tensor raw, or pyramid-compressed when that shrinks it."""
+    arr = np.ascontiguousarray(arr)
+    if compress and arr.dtype.kind == "f" and arr.size >= 64:
+        payload, meta = get_codec("fpdelta-pyramid").encode(arr)
+        if len(payload) < arr.nbytes:
+            ctx.write_bytes(domain, name, payload, dtype=str(arr.dtype),
+                            shape=arr.shape, codec="fpdelta-pyramid",
+                            meta=meta)
+            return
+    ctx.write_array(domain, name, arr)
+
+
+class AmrTreeKind(ObjectKind):
+    """Self-describing per-domain AMR object (paper §2 HDep data model).
+
+    Records: ``amr/refine``, ``amr/owner`` (boolrle), ``amr/level_offsets``,
+    ``amr/coords0`` (raw), ``amr/field/<name>`` (fpdelta-tree or raw).
+    """
+
+    name = "amr_tree"
+    prefix = "amr/"
+
+    def parse(self, record_name: str) -> dict:
+        rest = record_name[len(self.prefix):]
+        if rest.startswith("field/"):
+            return {"part": "field", "field": rest[len("field/"):]}
+        return {"part": rest}
+
+    def write(self, ctx, domain: int, tree, *, compress_fields: bool = True,
+              zbits: int = 4) -> None:
+        from ..core import fpdelta
+        enc_bool = get_codec("boolrle").encode
+        for part, bits in (("refine", tree.refine), ("owner", tree.owner)):
+            payload, _ = enc_bool(bits)
+            ctx.write_bytes(domain, f"amr/{part}", payload, dtype="bool",
+                            shape=bits.shape, codec="boolrle")
+        ctx.write_array(domain, "amr/level_offsets", tree.level_offsets)
+        ctx.write_array(domain, "amr/coords0",
+                        tree.coords[tree.level_slice(0)].astype(np.int64))
+        for fname, v in tree.fields.items():
+            if compress_fields:
+                tc = fpdelta.encode_tree_field(tree, fname, zbits=zbits)
+                ctx.write_bytes(domain, f"amr/field/{fname}",
+                                codecs.encode_tree_field(tc),
+                                dtype=str(v.dtype), shape=v.shape,
+                                codec="fpdelta-tree", meta={"width": tc.width})
+            else:
+                ctx.write_array(domain, f"amr/field/{fname}", v)
+
+    def assemble(self, view: ContextView, domain: int = 0, **opts):
+        """Rebuild one domain's AMRTree from its self-describing object."""
+        from ..core.amr import CHILD_OFFSETS, AMRTree
+        refine = view.read(domain, "amr/refine").astype(bool)
+        owner = view.read(domain, "amr/owner").astype(bool)
+        offsets = view.read(domain, "amr/level_offsets").astype(np.int64)
+        coords0 = view.read(domain, "amr/coords0").astype(np.int64)
+        # reconstruct coords from the BFS structure (self-describing:
+        # children coords follow from fathers')
+        n = refine.shape[0]
+        coords = np.zeros((n, 3), np.int64)
+        coords[:coords0.shape[0]] = coords0
+        tree = AMRTree(refine=refine, owner=owner, level_offsets=offsets,
+                       coords=coords)
+        cs = tree.child_start()
+        for lvl in range(tree.n_levels - 1):
+            sl = tree.level_slice(lvl)
+            idx = np.flatnonzero(tree.refine[sl]) + sl.start
+            for k in range(8):
+                coords[cs[idx] + k] = 2 * coords[idx] + CHILD_OFFSETS[k]
+        for rec in view.select(domains=domain, names="amr/field/*"):
+            fname = self.parse(rec.name)["field"]
+            payload = view.db.read_payload(rec)
+            if rec.codec == "fpdelta-tree":
+                tree.fields[fname] = codecs.decode_tree_field_bytes(
+                    payload, tree, fname, int(rec.meta["width"]))
+            else:
+                tree.fields[fname] = np.frombuffer(
+                    payload, dtype=rec.dtype).reshape(rec.shape).copy()
+        return tree
+
+    def domains_in(self, view: ContextView) -> list[int]:
+        return view.domains("amr/refine")
+
+
+class AnalysisKind(ObjectKind):
+    """Named analysis tensors (``analysis/<name>``), pyramid-compressible."""
+
+    name = "analysis"
+    prefix = "analysis/"
+
+    def parse(self, record_name: str) -> dict:
+        return {"tensor": record_name[len(self.prefix):]}
+
+    def write(self, ctx, domain: int, tensors: dict, *,
+              compress: bool = True) -> None:
+        for tname, arr in tensors.items():
+            _write_maybe_compressed(ctx, domain, f"analysis/{tname}",
+                                    np.asarray(arr), compress)
+
+    def assemble(self, view: ContextView, domain: int = 0, **opts
+                 ) -> dict[str, np.ndarray]:
+        got = view.read_many(selector=Selector(
+            names="analysis/*", domains=domain))
+        return {self.parse(name)["tensor"]: arr
+                for (_, name), arr in got.items()}
+
+
+class ReducedKind(ObjectKind):
+    """In-transit reduction outputs (``reduced/<reducer>/<name>``)."""
+
+    name = "reduced"
+    prefix = "reduced/"
+
+    def parse(self, record_name: str) -> dict:
+        reducer, _, array = record_name[len(self.prefix):].partition("/")
+        return {"reducer": reducer, "array": array}
+
+    def record_name(self, reducer: str, array: str) -> str:
+        assert "/" not in array, f"reduced array name {array!r} contains '/'"
+        return f"reduced/{reducer}/{array}"
+
+    def write(self, ctx, domain: int, arrays: dict, *, reducer: str,
+              compress: bool = False) -> None:
+        for aname, arr in arrays.items():
+            _write_maybe_compressed(ctx, domain,
+                                    self.record_name(reducer, aname),
+                                    arr, compress)
+
+    def assemble(self, view: ContextView, domain: int = 0, *,
+                 reducer: str, **opts) -> dict[str, np.ndarray]:
+        prefix = f"reduced/{reducer}/"
+        recs = [r for r in view.select(domains=domain)
+                if r.name.startswith(prefix)]
+        if not recs:
+            raise KeyError(
+                f"no reduced object {reducer!r} in context {view.step}")
+        arrays = view.read_records(recs)
+        return {r.name[len(prefix):]: a for r, a in zip(recs, arrays)}
+
+    def reducers_in(self, view: ContextView) -> list[str]:
+        return sorted({self.parse(n)["reducer"] for n in view._by_name
+                       if self.match(n)})
+
+
+class CkptShardKind(ObjectKind):
+    """HProt checkpoint shards: one record per owned device shard.
+
+    Naming schema: the pytree key path of the leaf (``['params']['w']``);
+    ``meta`` carries the global shape and this shard's index slices, so
+    any target topology can reassemble exactly the regions it needs.
+    This is the fallback kind: every record no other kind claims.
+    """
+
+    name = "ckpt_shard"
+    prefix = ""
+
+    def match(self, record_name: str) -> bool:
+        return False  # fallback: claimed only via kind_of()
+
+    def shards(self, view: ContextView, name: str) -> list[Record]:
+        return view.select(Selector(names=name, kinds=self.name))
+
+    def read_region(self, view: ContextView, name: str,
+                    target_slices) -> np.ndarray:
+        """Elastic region read: decode only overlapping source shards."""
+        recs = self.shards(view, name)
+        if not recs:
+            raise KeyError(
+                f"checkpoint context {view.step} missing tensor {name!r}")
+        gshape = tuple(recs[0].meta["global_shape"])
+        if not gshape:  # scalar: a single record, whole payload
+            return view.read_record(recs[0]).reshape(())
+        out = np.empty([s.stop - s.start for s in target_slices],
+                       _dtype_of(recs[0].dtype))
+        hits = []
+        for rec in recs:
+            src = [slice(a, b) for a, b in rec.meta["slices"]]
+            # shards from unsharded leaves record no slices: full extent
+            src += [slice(0, dim) for dim in gshape[len(src):]]
+            inter = []
+            for ts, ss in zip(target_slices, src):
+                lo, hi = max(ts.start, ss.start), min(ts.stop, ss.stop)
+                if lo >= hi:
+                    break
+                inter.append((lo, hi))
+            else:
+                hits.append((rec, src, inter))
+        for (rec, src, inter), data in zip(hits, view.read_records(
+                [rec for rec, _, _ in hits])):
+            dst = tuple(slice(lo - ts.start, hi - ts.start)
+                        for (lo, hi), ts in zip(inter, target_slices))
+            s_src = tuple(slice(lo - ss.start, hi - ss.start)
+                          for (lo, hi), ss in zip(inter, src))
+            out[dst] = data[s_src]
+        return out
+
+
+AMR_TREE = register_kind(AmrTreeKind())
+ANALYSIS = register_kind(AnalysisKind())
+REDUCED = register_kind(ReducedKind())
+CKPT_SHARD = register_kind(CkptShardKind(), fallback=True)
+
+
+# ------------------------------------------------------- object-level API
+
+def write_object(ctx, kind: str, domain: int, payload, **opts) -> None:
+    """Write one typed object into a context (dispatch by kind name)."""
+    if kind not in KINDS:
+        raise ValueError(f"unknown object kind {kind!r}; "
+                         f"registered: {sorted(KINDS)}")
+    KINDS[kind].write(ctx, domain, payload, **opts)
+
+
+def read_object(db: HerculeDB, step: int, kind: str, domain: int = 0,
+                **opts):
+    """Assemble one typed object from a context's records."""
+    if kind not in KINDS:
+        raise ValueError(f"unknown object kind {kind!r}; "
+                         f"registered: {sorted(KINDS)}")
+    return KINDS[kind].assemble(db.view(step), domain, **opts)
+
+
+# ------------------------------------------------------------------- scan
+
+@dataclasses.dataclass(frozen=True)
+class RecordRef:
+    """One matched record with enough context to read it."""
+    view: ContextView
+    record: Record
+
+    @property
+    def step(self) -> int:
+        return self.view.step
+
+    @property
+    def kind(self) -> str:
+        return kind_of(self.record.name).name
+
+    def read(self) -> np.ndarray:
+        return self.view.read_record(self.record)
+
+
+def scan(db: HerculeDB, selector: Selector | None = None, **kw):
+    """Iterate matching records across every context of a database.
+
+    Yields :class:`RecordRef` in (step, manifest) order. Contexts whose
+    step the selector rejects are skipped without opening their manifest.
+    """
+    sel = as_selector(selector, **kw)
+    for step in db.contexts():
+        if not sel.match_step(step):
+            continue
+        view = db.view(step)
+        for rec in view.select(sel):
+            yield RecordRef(view, rec)

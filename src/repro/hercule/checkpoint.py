@@ -26,7 +26,6 @@ The paper's HProt flow, mapped to ML (DESIGN.md §2):
 """
 from __future__ import annotations
 
-import json
 import queue
 import threading
 
@@ -34,7 +33,7 @@ import jax
 import numpy as np
 
 from ..core import pyramid as pyr
-from . import codecs
+from . import api, codecs
 from .database import HerculeDB
 
 _SENTINEL = object()
@@ -213,51 +212,21 @@ class CheckpointManager:
             step = self.latest_step()
         if step is None:
             raise FileNotFoundError("no complete checkpoint context found")
-        index = self.db.load_index(step)
-        byname: dict[str, list] = {}
-        for rec in index["records"]:
-            byname.setdefault(rec.name, []).append(rec)
+        view = self.db.view(step)
 
         def restore_leaf(path, leaf):
             name = jax.tree_util.keystr(path)
             if leaf is None:
                 return None
-            recs = byname.get(name)
-            if recs is None:
+            recs = api.CKPT_SHARD.shards(view, name)
+            if not recs:
                 raise KeyError(f"checkpoint {step} missing tensor {name!r}")
             gshape = tuple(recs[0].meta["global_shape"])
-            dtype = recs[0].dtype
-            from .database import _dtype_of
-            np_dtype = _dtype_of(dtype)
 
             def read_region(target_slices):
-                out = np.empty([s.stop - s.start for s in target_slices] or
-                               [int(np.prod(gshape))] if gshape else [],
-                               np_dtype)
-                if not gshape:  # scalar
-                    from .database import decode_record
-                    return decode_record(self.db, recs[0]).reshape(())
-                out = np.empty([s.stop - s.start for s in target_slices], np_dtype)
-                for rec in recs:
-                    src = [slice(a, b) for a, b in rec.meta["slices"]]
-                    inter = []
-                    ok = True
-                    for ts, ss in zip(target_slices, src):
-                        lo, hi = max(ts.start, ss.start), min(ts.stop, ss.stop)
-                        if lo >= hi:
-                            ok = False
-                            break
-                        inter.append((lo, hi))
-                    if not ok:
-                        continue
-                    from .database import decode_record
-                    data = decode_record(self.db, rec)
-                    dst = tuple(slice(lo - ts.start, hi - ts.start)
-                                for (lo, hi), ts in zip(inter, target_slices))
-                    s_src = tuple(slice(lo - ss.start, hi - ss.start)
-                                  for (lo, hi), ss in zip(inter, src))
-                    out[dst] = data[s_src]
-                return out
+                # only the source shards overlapping the target region are
+                # decoded (elastic), in parallel on the db's read pool
+                return api.CKPT_SHARD.read_region(view, name, target_slices)
 
             sharding = getattr(leaf, "sharding", None)
             if isinstance(leaf, (jax.Array, jax.ShapeDtypeStruct)) and sharding is not None:
@@ -272,5 +241,5 @@ class CheckpointManager:
             return jax.numpy.asarray(full) if isinstance(leaf, jax.Array) else full
 
         flat, treedef = jax.tree_util.tree_flatten_with_path(template)
-        leaves = [restore_leaf(p, l) for p, l in flat]
-        return jax.tree_util.tree_unflatten(treedef, leaves), index["attrs"]
+        leaves = [restore_leaf(p, leaf) for p, leaf in flat]
+        return jax.tree_util.tree_unflatten(treedef, leaves), view.attrs

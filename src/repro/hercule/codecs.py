@@ -14,6 +14,7 @@ import struct
 import numpy as np
 
 from ..core import fpdelta, pyramid
+from .database import _dtype_of, register_codec
 
 _HDR = struct.Struct("<IQ")
 
@@ -113,16 +114,43 @@ def decode_tree_field_bytes(data: bytes, tree, field: str, width: int) -> np.nda
     return fpdelta.decode_tree_field(tree, tc)
 
 
-# ----------------------------------------------------- record-level entry
+# ------------------------------------------------- codec registry entries
 
-def decode(db, rec, payload: bytes) -> np.ndarray:
-    """Entry point used by ``database.decode_record``."""
-    from .database import _dtype_of
-    dtype = _dtype_of(rec.dtype)
-    if rec.codec == "fpdelta-pyramid":
-        return decode_pyramid_bytes(payload, rec.meta, dtype, rec.shape)
-    if rec.codec == "fpdelta-delta":
-        pred_step = int(rec.meta["pred_step"])
-        prev = db.read(pred_step, rec.domain, rec.name)
-        return decode_delta_bytes(payload, prev, rec.meta, dtype, rec.shape)
-    raise ValueError(rec.codec)
+def _decode_fpdelta_pyramid(db, rec, payload: bytes) -> np.ndarray:
+    return decode_pyramid_bytes(payload, rec.meta, _dtype_of(rec.dtype),
+                                rec.shape)
+
+
+def _encode_fpdelta_pyramid(arr: np.ndarray, *, zbits: int = 4
+                            ) -> tuple[bytes, dict]:
+    pc = pyramid.encode_pyramid(np.ascontiguousarray(arr), zbits=zbits)
+    return encode_pyramid(pc), {"pad": pc.pad}
+
+
+def _decode_fpdelta_delta(db, rec, payload: bytes) -> np.ndarray:
+    # temporal father-son: the predictor is the same record in an earlier
+    # context, read back through the database (self-describing chain)
+    pred_step = int(rec.meta["pred_step"])
+    prev = db.read(pred_step, rec.domain, rec.name)
+    return decode_delta_bytes(payload, prev, rec.meta, _dtype_of(rec.dtype),
+                              rec.shape)
+
+
+def _encode_fpdelta_delta(arr: np.ndarray, *, prev: np.ndarray,
+                          zbits: int = 4) -> tuple[bytes, dict]:
+    """Caller must merge ``{"pred_step": <step of prev>}`` into the meta."""
+    dc = pyramid.encode_delta(np.ascontiguousarray(arr), prev, zbits=zbits)
+    return encode_delta(dc), {"pad": dc.pad}
+
+
+register_codec("fpdelta-pyramid", decode=_decode_fpdelta_pyramid,
+               encode=_encode_fpdelta_pyramid)
+# "pyramid" is the user-facing alias (checkpoint mode names, docs); both
+# names decode identically so either may appear in a record
+register_codec("pyramid", decode=_decode_fpdelta_pyramid,
+               encode=_encode_fpdelta_pyramid)
+register_codec("fpdelta-delta", decode=_decode_fpdelta_delta,
+               encode=_encode_fpdelta_delta)
+# fpdelta-tree payloads need the assembled AMR tree structure to decode:
+# the amr_tree ObjectKind drives them; record-level decode is unavailable
+register_codec("fpdelta-tree", decode=None, encode=None)

@@ -24,15 +24,19 @@ no shared-file locking; different groups write in parallel threads
 """
 from __future__ import annotations
 
+import collections
 import concurrent.futures as cf
 import dataclasses
 import json
 import os
+import re
 import threading
 
 import numpy as np
 
 _DTYPES = {"bool": np.bool_}
+
+_CTX_RE = re.compile(r"^ctx_(\d+)$")
 
 
 def _dtype_of(name: str):
@@ -40,6 +44,77 @@ def _dtype_of(name: str):
         import ml_dtypes
         return np.dtype(ml_dtypes.bfloat16)
     return np.dtype(_DTYPES.get(name, name))
+
+
+# ----------------------------------------------------------- codec registry
+
+@dataclasses.dataclass(frozen=True)
+class Codec:
+    """One record codec: how payload bytes become an array and back.
+
+    ``decode(db, rec, payload) -> np.ndarray`` must be able to rebuild the
+    array from the record alone (codecs with cross-context predictors, like
+    ``fpdelta-delta``, may read other contexts through ``db``).
+    ``encode(arr, **opts) -> (payload, meta)`` is optional: codecs that
+    need out-of-band structure to encode (e.g. ``fpdelta-tree`` needs the
+    AMR tree) are write-side-only and are driven by their ObjectKind.
+    """
+    name: str
+    decode: object
+    encode: object = None
+
+
+_CODECS: dict[str, Codec] = {}
+
+
+def register_codec(name: str, *, decode, encode=None) -> Codec:
+    """Register (or replace) a record codec under ``name``."""
+    codec = Codec(name=name, decode=decode, encode=encode)
+    _CODECS[name] = codec
+    return codec
+
+
+def codec_names() -> list[str]:
+    """Names of all registered codecs (importing the standard set)."""
+    from . import codecs  # noqa: F401  (registers fpdelta-*/pyramid)
+    return sorted(_CODECS)
+
+
+def get_codec(name: str) -> Codec:
+    codec = _CODECS.get(name)
+    if codec is None:
+        # the fpdelta family registers on first import of .codecs; a bare
+        # `from repro.hercule.database import ...` may predate that
+        from . import codecs  # noqa: F401
+        codec = _CODECS.get(name)
+    if codec is None:
+        raise ValueError(
+            f"unknown codec {name!r}; registered codecs: {sorted(_CODECS)}")
+    return codec
+
+
+def _decode_raw(db, rec, payload: bytes) -> np.ndarray:
+    return np.frombuffer(payload, dtype=_dtype_of(rec.dtype)) \
+        .reshape(rec.shape).copy()
+
+
+def _encode_raw(arr: np.ndarray) -> tuple[bytes, dict]:
+    return np.ascontiguousarray(arr).tobytes(), {}
+
+
+def _decode_boolrle(db, rec, payload: bytes) -> np.ndarray:
+    from ..core import boolcodec
+    return boolcodec.decode(payload, n=int(np.prod(rec.shape))) \
+        .reshape(rec.shape)
+
+
+def _encode_boolrle(arr: np.ndarray) -> tuple[bytes, dict]:
+    from ..core import boolcodec
+    return boolcodec.encode(np.ascontiguousarray(arr, dtype=bool)), {}
+
+
+register_codec("raw", decode=_decode_raw, encode=_encode_raw)
+register_codec("boolrle", decode=_decode_boolrle, encode=_encode_boolrle)
 
 
 @dataclasses.dataclass
@@ -130,6 +205,10 @@ class HerculeDB:
         self.io_threads = int(manifest.get("io_threads", 4))
         self._groups: dict[int, _GroupFiles] = {}
         self._glock = threading.Lock()
+        self._views: collections.OrderedDict = collections.OrderedDict()
+        self._view_cache_entries = 16
+        self._vlock = threading.Lock()
+        self._read_pool: cf.ThreadPoolExecutor | None = None
         os.makedirs(os.path.join(root, "data"), exist_ok=True)
 
     # ------------------------------------------------------------- setup
@@ -174,9 +253,12 @@ class HerculeDB:
     def contexts(self) -> list[int]:
         out = []
         for d in os.listdir(self.root):
-            if d.startswith("ctx_") and os.path.exists(
+            m = _CTX_RE.match(d)
+            # stray ctx_* directories with non-numeric suffixes (editor
+            # droppings, aborted tooling) are not contexts: skip them
+            if m and os.path.exists(
                     os.path.join(self.root, d, "MANIFEST.json")):
-                out.append(int(d[4:]))
+                out.append(int(m.group(1)))
         return sorted(out)
 
     def latest_context(self) -> int | None:
@@ -194,28 +276,60 @@ class HerculeDB:
                 "records": [Record.from_json(r) for r in raw["records"]]}
 
     # ------------------------------------------------------------ reading
+    def view(self, step: int):
+        """Indexed :class:`~repro.hercule.api.ContextView` of one context.
+
+        The context manifest is parsed once and the view cached (contexts
+        are immutable once finalized); every read entry point routes
+        through here instead of re-parsing MANIFEST.json per read.
+        """
+        from .api import ContextView
+        with self._vlock:
+            v = self._views.get(step)
+            if v is not None:
+                self._views.move_to_end(step)
+                return v
+        v = ContextView(self, step)
+        with self._vlock:
+            v = self._views.setdefault(step, v)
+            self._views.move_to_end(step)
+            while len(self._views) > self._view_cache_entries:
+                self._views.popitem(last=False)
+        return v
+
+    def _invalidate_view(self, step: int) -> None:
+        with self._vlock:
+            self._views.pop(step, None)
+
+    def _reader_pool(self) -> cf.ThreadPoolExecutor:
+        """Shared decode pool for batched reads (read-path ``io_threads``)."""
+        with self._vlock:
+            if self._read_pool is None:
+                self._read_pool = cf.ThreadPoolExecutor(
+                    max_workers=max(1, self.io_threads),
+                    thread_name_prefix="hercule-read")
+            return self._read_pool
+
     def read_payload(self, rec: Record) -> bytes:
         with open(os.path.join(self.root, "data", rec.file), "rb") as f:
             f.seek(rec.offset)
             return f.read(rec.nbytes)
 
     def read(self, step: int, domain: int, name: str) -> np.ndarray:
-        idx = self.load_index(step)
-        for rec in idx["records"]:
-            if rec.domain == domain and rec.name == name:
-                return decode_record(self, rec)
-        raise KeyError(f"({domain}, {name}) not in context {step}")
+        return self.view(step).read(domain, name)
 
     def records(self, step: int, name: str | None = None,
                 domain: int | None = None) -> list[Record]:
-        idx = self.load_index(step)
-        return [r for r in idx["records"]
-                if (name is None or r.name == name)
-                and (domain is None or r.domain == domain)]
+        return self.view(step).select(names=name, domains=domain)
 
     def close(self):
         for g in self._groups.values():
             g.close()
+        with self._vlock:
+            pool, self._read_pool = self._read_pool, None
+            self._views.clear()
+        if pool is not None:
+            pool.shutdown(wait=True)
 
 
 class ContextWriter:
@@ -272,6 +386,7 @@ class ContextWriter:
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, path)  # atomic commit
+        self.db._invalidate_view(self.step)  # drop any stale cached view
 
     def abort(self) -> None:
         self._pool.shutdown(wait=False, cancel_futures=True)
@@ -280,14 +395,14 @@ class ContextWriter:
 # ---------------------------------------------------------------- codecs
 
 def decode_record(db: HerculeDB, rec: Record) -> np.ndarray:
-    """Decode a record payload according to its codec (self-describing)."""
-    payload = db.read_payload(rec)
-    if rec.codec == "raw":
-        return np.frombuffer(payload, dtype=_dtype_of(rec.dtype)).reshape(rec.shape).copy()
-    if rec.codec == "boolrle":
-        from ..core import boolcodec
-        return boolcodec.decode(payload, n=int(np.prod(rec.shape))).reshape(rec.shape)
-    if rec.codec in ("fpdelta-pyramid", "fpdelta-delta"):
-        from . import codecs
-        return codecs.decode(db, rec, payload)
-    raise ValueError(f"unknown codec {rec.codec!r}")
+    """Decode a record payload according to its codec (self-describing).
+
+    Dispatches through the codec registry — new codecs plug in via
+    :func:`register_codec` instead of growing an if-chain here.
+    """
+    codec = get_codec(rec.codec)
+    if codec.decode is None:
+        raise ValueError(
+            f"codec {rec.codec!r} is not record-decodable on its own; "
+            f"it is assembled by its object kind (see repro.hercule.api)")
+    return codec.decode(db, rec, db.read_payload(rec))

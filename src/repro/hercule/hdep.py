@@ -1,167 +1,102 @@
-"""HDep post-processing database: self-describing AMR objects (paper §2).
+"""HDep post-processing flows — legacy free functions (deprecated).
 
-Each domain stores one *object* per context following the Hercule AMR-3D
-data model: the two boolean arrays (refinement, ownership — RLE/base-52
-compressed), level offsets, and the physical fields (father–son delta
-compressed, top-down decodable). Any reader can assemble the full AMR tree
-from the objects alone — nothing about the producing code is needed.
+The HDep object flavors now live in :mod:`repro.hercule.api` as typed
+ObjectKinds (``amr_tree``, ``analysis``, ``reduced``): each kind declares
+its record naming schema, write/read codecs and assembly logic, and every
+read routes through an indexed :class:`~repro.hercule.api.ContextView`.
 
-The ML flavor (`write_analysis` / `read_analysis`) stores named tensors
-with the pyramid codec for weight/activation analysis dumps.
+This module keeps the original free functions as thin deprecation shims
+so existing callers keep working (DESIGN.md §11 has the migration table
+and the deprecation policy). New code should call::
 
-The *reduced* flavor (`write_reduced` / `read_reduced`) stores the output
-of in-transit reductions (:mod:`repro.insitu`): purpose-specific
-lightweight objects (slice images, projections, histograms, LOD tree
-cuts) written at their own cadence, far smaller than full domain trees.
-Each reducer's arrays live under ``reduced/<reducer>/<name>`` and stay
-self-describing — a catalog reader needs only the database directory.
+    from repro.hercule import api
+    api.write_object(ctx, "amr_tree", domain, tree)
+    tree   = api.read_object(db, step, "amr_tree", domain)
+    stats  = api.read_object(db, step, "analysis", domain)
+    arrays = api.read_object(db, step, "reduced", domain, reducer=name)
 """
 from __future__ import annotations
 
+import warnings
+
 import numpy as np
 
-from ..core import boolcodec, fpdelta, pyramid as pyr
 from ..core.amr import AMRTree
-from . import codecs
+from . import api
 from .database import HerculeDB
+
+
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.hercule.hdep.{old} is deprecated; use {new} "
+        f"(see DESIGN.md §11)", DeprecationWarning, stacklevel=3)
 
 
 # --------------------------------------------------------------- AMR flow
 
 def write_domain_tree(ctx, domain: int, tree: AMRTree, *,
                       compress_fields: bool = True, zbits: int = 4) -> None:
-    """Write one domain's (pruned) AMR object into a context."""
-    ctx.write_bytes(domain, "amr/refine", boolcodec.encode(tree.refine),
-                    dtype="bool", shape=tree.refine.shape, codec="boolrle")
-    ctx.write_bytes(domain, "amr/owner", boolcodec.encode(tree.owner),
-                    dtype="bool", shape=tree.owner.shape, codec="boolrle")
-    ctx.write_array(domain, "amr/level_offsets", tree.level_offsets)
-    ctx.write_array(domain, "amr/coords0",
-                    tree.coords[tree.level_slice(0)].astype(np.int64))
-    for name, v in tree.fields.items():
-        if compress_fields:
-            tc = fpdelta.encode_tree_field(tree, name, zbits=zbits)
-            ctx.write_bytes(domain, f"amr/field/{name}",
-                            codecs.encode_tree_field(tc),
-                            dtype=str(v.dtype), shape=v.shape,
-                            codec="fpdelta-tree", meta={"width": tc.width})
-        else:
-            ctx.write_array(domain, f"amr/field/{name}", v)
+    """Deprecated shim for ``api.write_object(ctx, "amr_tree", ...)``."""
+    _deprecated("write_domain_tree",
+                'api.write_object(ctx, "amr_tree", domain, tree)')
+    api.write_object(ctx, "amr_tree", domain, tree,
+                     compress_fields=compress_fields, zbits=zbits)
 
 
 def read_domain_tree(db: HerculeDB, step: int, domain: int) -> AMRTree:
-    """Rebuild one domain's AMRTree from its self-describing object."""
-    refine = db.read(step, domain, "amr/refine").astype(bool)
-    owner = db.read(step, domain, "amr/owner").astype(bool)
-    offsets = db.read(step, domain, "amr/level_offsets").astype(np.int64)
-    coords0 = db.read(step, domain, "amr/coords0").astype(np.int64)
-    # reconstruct coords from the BFS structure (self-describing: children
-    # coords follow from fathers')
-    n = refine.shape[0]
-    coords = np.zeros((n, 3), np.int64)
-    coords[:coords0.shape[0]] = coords0
-    tree = AMRTree(refine=refine, owner=owner, level_offsets=offsets,
-                   coords=coords)
-    cs = tree.child_start()
-    from ..core.amr import CHILD_OFFSETS
-    for l in range(tree.n_levels - 1):
-        sl = tree.level_slice(l)
-        idx = np.flatnonzero(tree.refine[sl]) + sl.start
-        for k in range(8):
-            coords[cs[idx] + k] = 2 * coords[idx] + CHILD_OFFSETS[k]
-    # fields
-    for rec in db.records(step, domain=domain):
-        if not rec.name.startswith("amr/field/"):
-            continue
-        fname = rec.name[len("amr/field/"):]
-        payload = db.read_payload(rec)
-        if rec.codec == "fpdelta-tree":
-            tree.fields[fname] = codecs.decode_tree_field_bytes(
-                payload, tree, fname, int(rec.meta["width"]))
-        else:
-            tree.fields[fname] = np.frombuffer(
-                payload, dtype=rec.dtype).reshape(rec.shape).copy()
-    return tree
+    """Deprecated shim for ``api.read_object(db, step, "amr_tree", ...)``."""
+    _deprecated("read_domain_tree",
+                'api.read_object(db, step, "amr_tree", domain)')
+    return api.read_object(db, step, "amr_tree", domain)
 
 
 def domains_in(db: HerculeDB, step: int) -> list[int]:
-    return sorted({r.domain for r in db.records(step)
-                   if r.name == "amr/refine"})
+    """Deprecated shim for ``api.AMR_TREE.domains_in(db.view(step))``."""
+    _deprecated("domains_in", "api.AMR_TREE.domains_in(db.view(step))")
+    return api.AMR_TREE.domains_in(db.view(step))
 
 
 # ----------------------------------------------------------- reduced flow
 
-def _write_maybe_pyramid(ctx, domain: int, name: str, arr: np.ndarray,
-                         compress: bool) -> None:
-    """Write one tensor raw, or pyramid-compressed when that shrinks it."""
-    arr = np.ascontiguousarray(arr)
-    if compress and arr.dtype.kind == "f" and arr.size >= 64:
-        pc = pyr.encode_pyramid(arr)
-        payload = codecs.encode_pyramid(pc)
-        if len(payload) < arr.nbytes:
-            ctx.write_bytes(domain, name, payload, dtype=str(arr.dtype),
-                            shape=arr.shape, codec="fpdelta-pyramid",
-                            meta={"pad": pc.pad})
-            return
-    ctx.write_array(domain, name, arr)
-
-
 def write_reduced(ctx, domain: int, reducer: str,
                   arrays: dict[str, np.ndarray], *,
                   compress: bool = False) -> None:
-    """Write one reducer's output arrays as a reduced object.
-
-    Reduced objects are already small (that is the point of reducing), so
-    they default to raw records — a catalog cold read is then a single
-    seek+memcpy. ``compress=True`` additionally runs float arrays through
-    the (lossless) pyramid codec, trading write/read CPU for bytes; worth
-    it for archival cadences, not for live viewer traffic. Array names
-    may not contain ``/`` — the record path is
-    ``reduced/<reducer>/<name>``.
-    """
-    for name, arr in arrays.items():
-        assert "/" not in name, f"reduced array name {name!r} contains '/'"
-        _write_maybe_pyramid(ctx, domain, f"reduced/{reducer}/{name}",
-                             arr, compress)
+    """Deprecated shim for ``api.write_object(ctx, "reduced", ...)``."""
+    _deprecated("write_reduced",
+                'api.write_object(ctx, "reduced", domain, arrays, '
+                'reducer=reducer)')
+    api.write_object(ctx, "reduced", domain, arrays, reducer=reducer,
+                     compress=compress)
 
 
 def read_reduced(db: HerculeDB, step: int, reducer: str,
                  domain: int = 0) -> dict[str, np.ndarray]:
-    """Read back one reducer's output arrays from a context."""
-    from .database import decode_record
-    prefix = f"reduced/{reducer}/"
-    out = {}
-    for rec in db.records(step, domain=domain):
-        if rec.name.startswith(prefix):
-            out[rec.name[len(prefix):]] = decode_record(db, rec)
-    if not out:
-        raise KeyError(f"no reduced object {reducer!r} in context {step}")
-    return out
+    """Deprecated shim for ``api.read_object(db, step, "reduced", ...)``."""
+    _deprecated("read_reduced",
+                'api.read_object(db, step, "reduced", domain, '
+                'reducer=reducer)')
+    return api.read_object(db, step, "reduced", domain, reducer=reducer)
 
 
 def reducers_in(db: HerculeDB, step: int) -> list[str]:
-    """Names of all reduced objects present in a context."""
-    names = set()
-    for rec in db.records(step):
-        if rec.name.startswith("reduced/"):
-            names.add(rec.name.split("/", 2)[1])
-    return sorted(names)
+    """Deprecated shim for ``api.REDUCED.reducers_in(db.view(step))``."""
+    _deprecated("reducers_in", "api.REDUCED.reducers_in(db.view(step))")
+    return api.REDUCED.reducers_in(db.view(step))
 
 
 # ---------------------------------------------------------------- ML flow
 
 def write_analysis(ctx, domain: int, tensors: dict[str, np.ndarray], *,
                    compress: bool = True) -> None:
-    """Dump named tensors (weight stats, activations) for offline analysis."""
-    for name, arr in tensors.items():
-        _write_maybe_pyramid(ctx, domain, f"analysis/{name}",
-                             np.asarray(arr), compress)
+    """Deprecated shim for ``api.write_object(ctx, "analysis", ...)``."""
+    _deprecated("write_analysis",
+                'api.write_object(ctx, "analysis", domain, tensors)')
+    api.write_object(ctx, "analysis", domain, tensors, compress=compress)
 
 
-def read_analysis(db: HerculeDB, step: int, domain: int = 0) -> dict[str, np.ndarray]:
-    out = {}
-    from .database import decode_record
-    for rec in db.records(step, domain=domain):
-        if rec.name.startswith("analysis/"):
-            out[rec.name[len("analysis/"):]] = decode_record(db, rec)
-    return out
+def read_analysis(db: HerculeDB, step: int, domain: int = 0
+                  ) -> dict[str, np.ndarray]:
+    """Deprecated shim for ``api.read_object(db, step, "analysis", ...)``."""
+    _deprecated("read_analysis",
+                'api.read_object(db, step, "analysis", domain)')
+    return api.read_object(db, step, "analysis", domain)

@@ -18,7 +18,7 @@ import threading
 
 import numpy as np
 
-from ..hercule import hdep
+from ..hercule import api
 from ..hercule.database import HerculeDB
 
 Region = tuple[tuple[int, int], ...]
@@ -63,10 +63,20 @@ class Catalog:
         return self.db.latest_context()
 
     def reducers(self, step: int) -> list[str]:
-        return hdep.reducers_in(self.db, step)
+        return api.REDUCED.reducers_in(self.db.view(step))
 
     def attrs(self, step: int) -> dict:
-        return self.db.load_index(step)["attrs"]
+        return self.db.view(step).attrs
+
+    def scan(self, selector: api.Selector | None = None, **kw):
+        """Iterate matching reduced records (see :func:`hercule.api.scan`).
+
+        Defaults to the ``reduced`` kind; pass an explicit selector to
+        widen. Yields :class:`~repro.hercule.api.RecordRef`.
+        """
+        if selector is None and "kinds" not in kw:
+            kw["kinds"] = "reduced"
+        return api.scan(self.db, selector, **kw)
 
     # ---------------------------------------------------------------- query
     def query(self, step: int, reducer: str, *,
@@ -85,7 +95,8 @@ class Catalog:
                 self._cache.move_to_end(key)
                 self.cache_hits += 1
         if full is None:
-            full = hdep.read_reduced(self.db, step, reducer, domain=domain)
+            full = api.read_object(self.db, step, "reduced", domain,
+                                   reducer=reducer)
             for arr in full.values():
                 # cached arrays are shared across viewers: freeze them so
                 # an in-place edit can't poison later queries (mutating
@@ -104,17 +115,21 @@ class Catalog:
 
     def series(self, reducer: str, name: str, *,
                steps: list[int] | None = None) -> tuple[np.ndarray, list]:
-        """(steps, values) time series of one array across contexts."""
-        steps = self.steps() if steps is None else steps
+        """(steps, values) time series of one array across contexts.
+
+        A Selector scan finds the contexts actually holding the record
+        (index lookups, no decoding); values are then served through the
+        cached :meth:`query` path. ``reducer``/``name`` are compared as
+        exact strings — glob characters in them are literal.
+        """
+        target = f"reduced/{reducer}/{name}"
+        sel = api.Selector(steps=steps, domains=0, kinds="reduced")
         out_steps, vals = [], []
-        for s in steps:
-            try:
-                obj = self.query(s, reducer)
-            except KeyError:
+        for ref in api.scan(self.db, sel):
+            if ref.record.name != target:
                 continue
-            if name in obj:
-                out_steps.append(s)
-                vals.append(obj[name])
+            out_steps.append(ref.step)
+            vals.append(self.query(ref.step, reducer)[name])
         return np.asarray(out_steps, np.int64), vals
 
     # ----------------------------------------------------------------- admin

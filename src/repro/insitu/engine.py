@@ -16,10 +16,8 @@ from __future__ import annotations
 
 import threading
 
-import numpy as np
-
 from ..core.amr import AMRTree
-from ..hercule import hdep
+from ..hercule import api
 from ..hercule.database import HerculeDB
 from .reducers import Reducer, ReducerDAG
 from .staging import StagingArea
@@ -123,8 +121,8 @@ class InTransitEngine:
             return
         ctx = self.db.begin_context(snap.step)
         for rname, arrays in outputs.items():
-            hdep.write_reduced(ctx, 0, rname, arrays,
-                               compress=self.compress)
+            api.write_object(ctx, "reduced", 0, arrays, reducer=rname,
+                             compress=self.compress)
         ctx.finalize(attrs={"insitu": {
             "kind": snap.kind,
             "reducers": sorted(outputs),

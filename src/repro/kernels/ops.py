@@ -12,7 +12,6 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..core import bitstream as bs
 from . import bitpack_kernel, fpdelta_kernel, ref

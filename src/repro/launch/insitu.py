@@ -104,6 +104,13 @@ def main(argv=None):
     print(f"   {args.queries} queries in {dt*1e3:.1f} ms — "
           f"hits={info['hits']} misses={info['misses']} "
           f"io_reads={info['io_reads']}")
+    # selector-driven sweep: all slice/projection images, one indexed pass
+    n_img = size_img = 0
+    for ref in cat.scan(names="reduced/*/image"):
+        n_img += 1
+        size_img += ref.record.nbytes
+    print(f"   selector sweep reduced/*/image: {n_img} records, "
+          f"{size_img/1e3:.1f} kB on disk")
     full_slice = next(r for r in reducers
                       if isinstance(r, SliceReducer) and r.source is None)
     img = cat.query(steps[-1], full_slice.name)["image"]

@@ -17,7 +17,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .. import sharding
 from . import attention, layers, moe, rglru, ssm
 from .transformer import LM, maybe_scan
 

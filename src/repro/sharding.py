@@ -14,7 +14,6 @@ import contextlib
 import threading
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # Default rules: tuple values are tried jointly (a dim can shard over

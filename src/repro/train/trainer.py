@@ -157,7 +157,7 @@ class Trainer:
 
     def _dump_analysis(self, step: int, state):
         """HDep flow at its own frequency (paper fig. 1)."""
-        from ..hercule import hdep as hdep_mod
+        from ..hercule import api as hercule_api
         from ..hercule.checkpoint import leaf_name
         ctx = self.hdep.begin_context(step)
         flat, _ = jax.tree_util.tree_flatten_with_path(state["params"])
@@ -167,5 +167,5 @@ class Trainer:
             arr = np.asarray(leaf)
             if arr.ndim >= 2:
                 stats[name] = arr
-        hdep_mod.write_analysis(ctx, 0, stats)
+        hercule_api.write_object(ctx, "analysis", 0, stats)
         ctx.finalize(attrs={"step": step})

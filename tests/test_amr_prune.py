@@ -8,7 +8,7 @@ except ImportError:  # fall back to fixed-example replay (tests/_hypothesis_fall
     from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import decompose, prune
-from repro.core.amr import AMRTree, subset_tree
+from repro.core.amr import subset_tree
 from repro.sim import amrgen, fields
 
 

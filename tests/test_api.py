@@ -1,0 +1,327 @@
+"""Unified Hercule object API: Selector semantics, indexed ContextView
+reads, the codec and ObjectKind registries, scan, and the deprecation
+shims over the legacy hdep free functions."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.hercule import HerculeDB, api
+from repro.hercule.database import codec_names, decode_record, get_codec
+
+
+@pytest.fixture()
+def db(tmp_path):
+    return HerculeDB.create(str(tmp_path / "db"), kind="hdep", ncf=2)
+
+
+def _write_step(db, step, *, domains=(0, 1)):
+    ctx = db.begin_context(step)
+    for d in domains:
+        ctx.write_array(d, "analysis/w", np.full((4, 4), step + d, np.float32))
+        ctx.write_array(d, "reduced/slice/image", np.full(8, 10 * step + d))
+    ctx.write_array(0, "['params']['w']", np.arange(6.0))
+    ctx.finalize(attrs={"step": step})
+    return ctx
+
+
+# ---------------------------------------------------------------- selector
+
+def test_selector_name_globs_and_exact():
+    sel = api.Selector(names="reduced/*/image")
+    assert sel.match_name("reduced/slice/image")
+    assert not sel.match_name("analysis/w")
+    # no glob chars -> exact match; brackets are NOT character classes
+    sel = api.Selector(names="['params']['w']")
+    assert sel.match_name("['params']['w']")
+    assert not sel.match_name("p")  # fnmatch would match a char class
+
+    multi = api.Selector(names=["analysis/*", "amr/refine"])
+    assert multi.match_name("analysis/w")
+    assert multi.match_name("amr/refine")
+    assert not multi.match_name("amr/owner")
+
+
+def test_selector_glob_with_brackets_stays_literal():
+    """Globbing honors only * and ? — brackets never become char classes."""
+    sel = api.Selector(names="analysis/['dense']*")
+    assert sel.match_name("analysis/['dense']['w']")
+    assert sel.match_name("analysis/['dense']['b']")
+    assert not sel.match_name("analysis/['conv']['w']")
+    assert api.Selector(names="['params']*").match_name("['params']['w']")
+
+
+def test_catalog_series_exact_names(tmp_path):
+    from repro.insitu import Catalog
+    db = HerculeDB.create(str(tmp_path / "cat"), kind="hdep", ncf=2)
+    for s in (1, 2, 4):
+        ctx = db.begin_context(s)
+        api.write_object(ctx, "reduced", 0, {"v": np.array([float(s)])},
+                         reducer="my[red]")  # brackets + globbable chars ok
+        ctx.finalize()
+    cat = Catalog(db)
+    steps, vals = cat.series("my[red]", "v")
+    np.testing.assert_array_equal(steps, [1, 2, 4])
+    assert [float(v[0]) for v in vals] == [1.0, 2.0, 4.0]
+    steps, _ = cat.series("my[red]", "v", steps=[2, 4])
+    np.testing.assert_array_equal(steps, [2, 4])
+    steps, _ = cat.series("other", "v")
+    assert steps.size == 0
+
+
+def test_selector_steps_domains_kinds():
+    assert api.Selector(steps=range(0, 10, 2)).match_step(4)
+    assert not api.Selector(steps=range(0, 10, 2)).match_step(5)
+    assert api.Selector(steps=7).match_step(7)
+    assert api.Selector(steps=[1, 3]).match_step(3)
+    assert api.Selector().match_step(123)
+
+    rec_a = api.Record(name="analysis/w", domain=1, file="f", offset=0,
+                       nbytes=4, dtype="float32", shape=(1,))
+    rec_c = api.Record(name="['params']['w']", domain=0, file="f", offset=0,
+                       nbytes=4, dtype="float32", shape=(1,))
+    assert api.Selector(kinds="analysis").match(rec_a)
+    assert not api.Selector(kinds="analysis").match(rec_c)
+    assert api.Selector(kinds=("ckpt_shard",)).match(rec_c)
+    assert not api.Selector(domains=0).match(rec_a)
+    with pytest.raises(ValueError, match="unknown object kind"):
+        api.Selector(kinds="nope")
+
+
+def test_kind_of_classification():
+    assert api.kind_of("amr/refine").name == "amr_tree"
+    assert api.kind_of("amr/field/density").name == "amr_tree"
+    assert api.kind_of("analysis/layer0.w").name == "analysis"
+    assert api.kind_of("reduced/slice256/image").name == "reduced"
+    assert api.kind_of("['params']['w']").name == "ckpt_shard"  # fallback
+    assert api.REDUCED.parse("reduced/slice256/image") == \
+        {"reducer": "slice256", "array": "image"}
+
+
+# ------------------------------------------------------------ context view
+
+def test_view_indexed_point_reads(db):
+    _write_step(db, 3)
+    view = db.view(3)
+    assert view is db.view(3)          # cached, parsed once
+    assert len(view) == 5
+    np.testing.assert_array_equal(view.read(1, "analysis/w"),
+                                  np.full((4, 4), 4, np.float32))
+    # db.read routes through the same view
+    np.testing.assert_array_equal(db.read(3, 1, "analysis/w"),
+                                  view.read(1, "analysis/w"))
+    with pytest.raises(KeyError, match="not in context 3"):
+        view.read(9, "analysis/w")
+    assert view.domains() == [0, 1]
+    assert view.domains("['params']['w']") == [0]
+    assert set(view.kinds()) == {"analysis", "reduced", "ckpt_shard"}
+    assert view.attrs["step"] == 3
+
+
+def test_view_batched_and_merged_reads(db):
+    _write_step(db, 1)
+    view = db.view(1)
+    got = view.read_many([(0, "analysis/w"), (1, "analysis/w")])
+    assert set(got) == {(0, "analysis/w"), (1, "analysis/w")}
+    np.testing.assert_array_equal(got[(1, "analysis/w")],
+                                  np.full((4, 4), 2, np.float32))
+    # selector form
+    got = view.read_many(names="reduced/slice/image")
+    assert set(got) == {(0, "reduced/slice/image"), (1, "reduced/slice/image")}
+    # domain-merged read of one name across contributors
+    merged = view.read_merged("analysis/w")
+    assert sorted(merged) == [0, 1]
+    np.testing.assert_array_equal(merged[0], np.full((4, 4), 1, np.float32))
+
+
+def test_view_select(db):
+    _write_step(db, 2)
+    view = db.view(2)
+    assert len(view.select()) == 5
+    assert [r.name for r in view.select(names="['params']['w']")] == \
+        ["['params']['w']"]
+    assert len(view.select(domains=1)) == 2
+    assert len(view.select(kinds="reduced")) == 2
+    assert len(view.select(names="reduced/*", domains=0)) == 1
+
+
+def test_scan_across_contexts(db):
+    for s in (1, 2, 3, 4):
+        _write_step(db, s)
+    refs = list(api.scan(db, steps=range(2, 5), names="reduced/*/image",
+                         domains=0))
+    assert [r.step for r in refs] == [2, 3, 4]
+    assert all(r.kind == "reduced" for r in refs)
+    np.testing.assert_array_equal(refs[0].read(), np.full(8, 20))
+
+
+# -------------------------------------------------------------- object API
+
+def test_amr_tree_kind_roundtrip(tmp_path):
+    from repro.core import decompose, prune
+    from repro.sim import amrgen, fields
+    t = amrgen.generate_tree(fields.sedov(), min_level=2, max_level=4,
+                             threshold=1.2)
+    dom = decompose.assign_domains(t, 2)
+    lt = decompose.local_tree(t, dom, 1, coarse_level=1)
+    pt = prune.prune(lt)
+    db = HerculeDB.create(str(tmp_path / "amr"), kind="hdep", ncf=2)
+    ctx = db.begin_context(0)
+    api.write_object(ctx, "amr_tree", 1, pt)
+    ctx.finalize()
+    rt = api.read_object(db, 0, "amr_tree", 1)
+    rt.validate()
+    assert np.array_equal(rt.refine, pt.refine)
+    assert np.array_equal(rt.coords, pt.coords)
+    for f in pt.fields:
+        assert np.array_equal(rt.fields[f], pt.fields[f]), f
+    assert api.AMR_TREE.domains_in(db.view(0)) == [1]
+
+
+def test_unknown_object_kind_raises(db):
+    ctx = db.begin_context(0)
+    with pytest.raises(ValueError, match="registered"):
+        api.write_object(ctx, "nope", 0, {})
+    ctx.abort()
+    with pytest.raises(ValueError, match="registered"):
+        api.read_object(db, 0, "nope")
+
+
+def test_ckpt_shard_elastic_region_read(tmp_path):
+    from repro.hercule.checkpoint import CheckpointManager
+    full = np.arange(64, dtype=np.float32).reshape(8, 8)
+    mgr = CheckpointManager(str(tmp_path / "ck"), ncf=2, async_write=False)
+    mgr.save(1, {"w": full})
+    view = mgr.db.view(1)
+    name = api.CKPT_SHARD.shards(view, "['w']")[0].name
+    region = api.CKPT_SHARD.read_region(view, name,
+                                        [slice(2, 6), slice(1, 4)])
+    np.testing.assert_array_equal(region, full[2:6, 1:4])
+    mgr.close()
+
+
+# ---------------------------------------------------------- codec registry
+
+def test_every_registered_codec_roundtrips_through_view(tmp_path):
+    rng = np.random.default_rng(0)
+    base = rng.standard_normal((16, 16)).astype(np.float32)
+    nxt = base + rng.standard_normal((16, 16)).astype(np.float32) * 1e-3
+    bits = rng.random(300) < 0.2
+
+    db = HerculeDB.create(str(tmp_path / "cod"), kind="hdep", ncf=2)
+    ctx = db.begin_context(0)
+    cases = {"raw": base, "boolrle": bits, "fpdelta-pyramid": base,
+             "pyramid": base}
+    for cname, arr in cases.items():
+        payload, meta = get_codec(cname).encode(arr)
+        ctx.write_bytes(0, f"x/{cname}", payload, dtype=str(arr.dtype),
+                        shape=arr.shape, codec=cname, meta=meta)
+    # the delta codec predicts from the same record in an earlier context
+    payload, meta = get_codec("raw").encode(base)
+    ctx.write_bytes(0, "x/fpdelta-delta", payload, dtype=str(base.dtype),
+                    shape=base.shape, codec="raw", meta=meta)
+    ctx.finalize()
+    ctx = db.begin_context(1)
+    payload, meta = get_codec("fpdelta-delta").encode(nxt, prev=base)
+    ctx.write_bytes(0, "x/fpdelta-delta", payload, dtype=str(nxt.dtype),
+                    shape=nxt.shape, codec="fpdelta-delta",
+                    meta={**meta, "pred_step": 0})
+    ctx.finalize()
+
+    view = db.view(0)
+    for cname, arr in cases.items():
+        np.testing.assert_array_equal(view.read(0, f"x/{cname}"), arr, err_msg=cname)
+    np.testing.assert_array_equal(db.view(1).read(0, "x/fpdelta-delta"), nxt)
+
+    # coverage guard: every codec that can round-trip standalone was tested
+    roundtrippable = {n for n in codec_names()
+                     if get_codec(n).encode is not None
+                     and get_codec(n).decode is not None}
+    assert roundtrippable == set(cases) | {"fpdelta-delta"}
+
+
+def test_unknown_codec_error_lists_known(db):
+    ctx = db.begin_context(0)
+    ctx.write_bytes(0, "x", b"\x00" * 8, dtype="float64", shape=(1,),
+                    codec="zstd-9000")
+    ctx.finalize()
+    with pytest.raises(ValueError) as ei:
+        db.view(0).read(0, "x")
+    msg = str(ei.value)
+    assert "zstd-9000" in msg
+    for known in ("raw", "boolrle", "fpdelta-pyramid", "fpdelta-delta"):
+        assert known in msg, msg
+
+
+def test_tree_codec_requires_kind_assembly(tmp_path):
+    """fpdelta-tree records are registered but only kind-decodable."""
+    from repro.sim import amrgen, fields
+    t = amrgen.generate_tree(fields.sedov(), min_level=2, max_level=3,
+                             threshold=1.2)
+    db = HerculeDB.create(str(tmp_path / "tr"), kind="hdep", ncf=1)
+    ctx = db.begin_context(0)
+    api.write_object(ctx, "amr_tree", 0, t)
+    ctx.finalize()
+    rec = db.view(0).record(0, "amr/field/density")
+    assert rec.codec == "fpdelta-tree"
+    with pytest.raises(ValueError, match="object kind"):
+        decode_record(db, rec)
+    # while the kind assembles it fine
+    rt = api.read_object(db, 0, "amr_tree", 0)
+    np.testing.assert_array_equal(rt.fields["density"], t.fields["density"])
+
+
+# ------------------------------------------------------- database hygiene
+
+def test_contexts_skips_stray_dirs(db):
+    _write_step(db, 4)
+    os.makedirs(os.path.join(db.root, "ctx_notastep"))
+    os.makedirs(os.path.join(db.root, "ctx_00000004_backup"))
+    os.makedirs(os.path.join(db.root, "ctx_00000009"))  # no MANIFEST: invisible
+    assert db.contexts() == [4]
+    assert db.latest_context() == 4
+
+
+# ------------------------------------------------------- deprecation shims
+
+def test_hdep_shims_warn_and_match_api(db):
+    from repro.hercule import hdep
+    ctx = db.begin_context(5)
+    tensors = {"w": np.arange(12.0).reshape(3, 4)}
+    arrays = {"image": np.arange(9.0).reshape(3, 3)}
+    with pytest.deprecated_call():
+        hdep.write_analysis(ctx, 0, tensors)
+    with pytest.deprecated_call():
+        hdep.write_reduced(ctx, 0, "myred", arrays)
+    ctx.finalize()
+
+    with pytest.deprecated_call():
+        legacy = hdep.read_analysis(db, 5)
+    np.testing.assert_array_equal(legacy["w"], tensors["w"])
+    np.testing.assert_array_equal(
+        api.read_object(db, 5, "analysis")["w"], tensors["w"])
+
+    with pytest.deprecated_call():
+        legacy = hdep.read_reduced(db, 5, "myred")
+    np.testing.assert_array_equal(legacy["image"], arrays["image"])
+    with pytest.deprecated_call():
+        assert hdep.reducers_in(db, 5) == ["myred"]
+    with pytest.raises(KeyError):
+        api.read_object(db, 5, "reduced", reducer="absent")
+
+
+def test_hdep_tree_shims_warn_and_match_api(tmp_path):
+    from repro.hercule import hdep
+    from repro.sim import amrgen, fields
+    t = amrgen.generate_tree(fields.sedov(), min_level=2, max_level=3,
+                             threshold=1.2)
+    db = HerculeDB.create(str(tmp_path / "sh"), kind="hdep", ncf=1)
+    ctx = db.begin_context(0)
+    with pytest.deprecated_call():
+        hdep.write_domain_tree(ctx, 0, t)
+    ctx.finalize()
+    with pytest.deprecated_call():
+        rt = hdep.read_domain_tree(db, 0, 0)
+    assert np.array_equal(rt.refine, t.refine)
+    with pytest.deprecated_call():
+        assert hdep.domains_in(db, 0) == [0]

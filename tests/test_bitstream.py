@@ -1,6 +1,5 @@
 """bitstream: pack/unpack roundtrips (unit + hypothesis property)."""
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # fall back to fixed-example replay (tests/_hypothesis_fallback.py)

@@ -1,9 +1,5 @@
 """Hercule database layer: contexts, NCF aggregation, rollover, crash
 safety, codecs; checkpoint manager incl. async + delta-chain + elastic."""
-import json
-import os
-import shutil
-
 import numpy as np
 import jax
 import jax.numpy as jnp

@@ -1,14 +1,12 @@
 """End-to-end integration: training + crash/restart bit-exactness,
 supervisor restarts, straggler monitor, HDep analysis flow, serving CLI."""
 import os
-import shutil
 import subprocess
 import sys
 
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.configs import get_smoke_config
 from repro.data.pipeline import DataConfig

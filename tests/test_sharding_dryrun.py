@@ -1,6 +1,5 @@
 """Sharding rules resolution + small-mesh dry-run (subprocess: the forced
 device count must be set before jax initializes)."""
-import json
 import os
 import subprocess
 import sys
