@@ -1,25 +1,182 @@
-"""In-transit engine: compute-loop overhead (engine on vs off) and
-reduction-query throughput vs post-hoc assembly of the same slice.
+"""In-transit engine: compute-loop overhead (engine on vs off),
+reduction-query throughput vs post-hoc assembly, and multi-domain
+contributor-group scaling with merge-at-read verification.
 
 The paper's argument in numbers: a viewer hitting the reduced catalog
 should beat re-assembling the global tree from full HDep objects by a
-large factor, while the compute flow pays ~nothing for staging.
+large factor, the compute flow should pay ~nothing for staging, and
+per-producer reduction+write should scale with contributor groups while
+merged reads return exactly the single-producer answer.
+
+The multi-domain mode emulates the paper's producers with OS processes
+(one per contributor group, like MPI ranks — threads would share the
+GIL and measure the interpreter, not the I/O path): each producer runs
+the reducer DAG on its own partition and lands its reduced objects as
+its own Hercule domain; the parent commits one manifest per context and
+verifies a 4-domain ``read_merged`` against the 1-domain reference.
+Workers are spawned (not forked — earlier bench modules may hold live
+XLA/pool threads) and receive the partitions once, at pool startup,
+outside every timed region.
 """
 from __future__ import annotations
 
+import multiprocessing as mp
+import os
 import shutil
-import tempfile
 import time
 
 import numpy as np
 
 from repro.hercule import HerculeDB, analysis, api
+from repro.hercule.database import Record
 from repro.insitu import Catalog, InTransitEngine, SliceReducer
 
-from .common import emit, orion_domains, timeit
+from .common import emit, orion_domains, scratch_dir, timeit
 
 RESOLUTION = 256
 
+# ---------------------------------------------------- multi-domain mode
+
+GROUPS = (1, 2, 4)
+MD_STEPS = 5
+MD_REPS = 6     # best-of: rides out noisy-neighbor CPU steal windows
+
+#: per-producer state installed into each spawned worker by _md_init
+_MD: dict = {}
+
+
+def _md_init(roots: dict, parts: dict) -> None:
+    _MD["roots"], _MD["parts"] = roots, parts
+
+
+def _md_reducers():
+    from repro.insitu import (LevelHistogramReducer, LODCutReducer,
+                              ProjectionReducer)
+    # fixed histogram bounds: per-partition auto bounds cannot merge
+    return [LODCutReducer(max_level=12),
+            ProjectionReducer(field="density", resolution=RESOLUTION),
+            LevelHistogramReducer(field="density", bins=64,
+                                  lo=0.0, hi=50.0)]
+
+
+def _md_land(args):
+    """One producer's task: reduce + write its domain for a step batch."""
+    from repro.insitu.reducers import ReducerDAG
+    from repro.insitu.staging import Snapshot
+    n_groups, g, steps = args
+    root, parts = _MD["roots"][n_groups], _MD["parts"][n_groups]
+    dag = ReducerDAG(_md_reducers())
+    db = HerculeDB.open(root)
+    out = []
+    for step in steps:
+        outputs = dag.run(Snapshot(step=step, kind="amr", arrays=parts[g],
+                                   domain=g, n_domains=n_groups))
+        ctx = db.begin_context(step)
+        for rname, arrays in outputs.items():
+            api.write_object(ctx, "reduced", g, arrays, reducer=rname,
+                             compress=False)
+        out.append((step, [r.to_json() for r in ctx.records]))
+        ctx.abort()   # records travel back to the parent, which commits
+    db.close()
+    return out
+
+
+def _md_commit(root: str, results, merge_map: dict) -> None:
+    """Commit one manifest per context from the producers' records."""
+    by_step: dict[int, list] = {}
+    for batch in results:
+        for step, recs in batch:
+            by_step.setdefault(step, []).extend(recs)
+    db = HerculeDB.open(root)
+    for step, recs in sorted(by_step.items()):
+        ctx = db.begin_context(step)
+        ctx.records.extend(Record.from_json(r) for r in recs)
+        ctx.finalize(attrs={"insitu": {
+            "merge": merge_map, "n_domains": len(results),
+            "domains": sorted({r["domain"] for r in recs})}})
+    db.close()
+
+
+def run_multidomain() -> float:
+    """Contributor-group scaling + merge-at-read equality. Returns the
+    4-group vs 1-group write-throughput ratio."""
+    tree, _, _ = orion_domains(16)
+    merge_map = {r.name: r.merge for r in _md_reducers()}
+    roots, parts_by_n, part_ms = {}, {}, {}
+    for n in GROUPS:
+        t0 = time.perf_counter()
+        from repro.insitu.partition import partition_snapshot
+        parts_by_n[n] = partition_snapshot(tree.to_arrays(), "amr", n)
+        part_ms[n] = (time.perf_counter() - t0) * 1e3
+        roots[n] = scratch_dir(f"hx_bench_md{n}_")
+        HerculeDB.create(roots[n], kind="hdep", ncf=1)
+    emit("insitu.partition_g4", part_ms[4] * 1e3,
+         f"hilbert split+closure into 4 groups, "
+         f"{tree.n_nodes} nodes", unit="us_per_call", repeats=1)
+
+    # one OS process per producer, capped at the cores we actually have
+    procs = min(max(GROUPS), os.cpu_count() or 1)
+    best = {n: float("inf") for n in GROUPS}
+    with mp.get_context("spawn").Pool(processes=procs, initializer=_md_init,
+                                      initargs=(roots, parts_by_n)) as pool:
+        for n in GROUPS:   # warm page caches, allocators, imports
+            pool.map(_md_land, [(n, g, [0]) for g in range(n)])
+        for rep in range(MD_REPS):      # interleave G's so drift hits all
+            for n in GROUPS:
+                steps = [1000 * rep + s for s in range(1, MD_STEPS + 1)]
+                t0 = time.perf_counter()
+                results = pool.map(_md_land,
+                                   [(n, g, steps) for g in range(n)])
+                best[n] = min(best[n], time.perf_counter() - t0)
+                if rep == 0:
+                    _md_commit(roots[n], results, merge_map)
+
+    nbytes = {}
+    for n in GROUPS:
+        db = HerculeDB.open(roots[n])
+        nbytes[n] = sum(sum(r.nbytes for r in db.view(s).records)
+                        for s in range(1, MD_STEPS + 1))
+        db.close()
+    thr = {n: nbytes[n] / best[n] for n in GROUPS}
+    for n in GROUPS:
+        emit(f"insitu.multidomain_write_g{n}",
+             best[n] / MD_STEPS * 1e6,
+             f"{thr[n]/1e6:.0f}MB/s reduce+write scaling="
+             f"{thr[n]/thr[1]:.2f}x producers={min(n, procs)}proc "
+             f"{nbytes[n]/MD_STEPS/1e6:.1f}MB/ctx",
+             repeats=MD_REPS)
+
+    # merge-at-read: the 4-domain merged object must equal the 1-domain
+    # reference (counts exactly; float images to fp-roundoff)
+    cat1, cat4 = Catalog(roots[1]), Catalog(roots[4])
+    checked = mismatched = 0
+    t0 = time.perf_counter()
+    for reducer in cat1.reducers(1):
+        ref, merged = cat1.query(1, reducer), cat4.query(1, reducer)
+        for k, a in ref.items():
+            b = merged[k]
+            checked += 1
+            ok = np.array_equal(a, b, equal_nan=True) if a.dtype.kind != "f" \
+                else bool(np.allclose(a, b, equal_nan=True, rtol=1e-12,
+                                      atol=0) or np.array_equal(
+                              a, b, equal_nan=True))
+            if not ok:
+                mismatched += 1
+    t_merge = time.perf_counter() - t0
+    emit("insitu.read_merged_g4", t_merge * 1e6,
+         f"arrays_checked={checked} mismatched={mismatched} "
+         f"domains={cat4.domains(1, cat4.reducers(1)[0])}", repeats=1)
+    cat1.db.close()
+    cat4.db.close()
+    for root in roots.values():
+        shutil.rmtree(root, ignore_errors=True)
+    if mismatched:
+        raise AssertionError(
+            f"merge-at-read mismatch: {mismatched}/{checked} arrays")
+    return thr[4] / thr[1]
+
+
+# ------------------------------------------------- single-writer mode
 
 def _compute_step(tree):
     """Stand-in compute work per step: touch the fields like a solver."""
@@ -32,6 +189,9 @@ def run(n_domains: int = 16, steps: int = 8):
     slicer = SliceReducer(field="density", axis=2, position=0.5,
                           resolution=RESOLUTION)
 
+    # -------- multi-domain contributor-group scaling + merge-at-read
+    scaling = run_multidomain()
+
     # ---------------- compute loop, engine OFF
     t0 = time.perf_counter()
     for _ in range(steps):
@@ -39,7 +199,7 @@ def run(n_domains: int = 16, steps: int = 8):
     t_off = time.perf_counter() - t0
 
     # ---------------- compute loop, engine ON (drop-oldest, never blocks)
-    red_root = tempfile.mkdtemp(prefix="hx_bench_insitu_")
+    red_root = scratch_dir("hx_bench_insitu_")
     eng = InTransitEngine(red_root, [slicer], policy="drop-oldest",
                           queue_capacity=2).start()
     t0 = time.perf_counter()
@@ -57,7 +217,7 @@ def run(n_domains: int = 16, steps: int = 8):
     eng.close()
 
     # ---------------- post-hoc baseline: full HDep objects -> assemble -> slice
-    full_root = tempfile.mkdtemp(prefix="hx_bench_posthoc_")
+    full_root = scratch_dir("hx_bench_posthoc_")
     db = HerculeDB.create(full_root, kind="hdep", ncf=4)
     ctx = db.begin_context(0)
     for d, pt in enumerate(pruned):
@@ -85,6 +245,7 @@ def run(n_domains: int = 16, steps: int = 8):
          f"cache={cat.cache_info()}")
     shutil.rmtree(red_root, ignore_errors=True)
     shutil.rmtree(full_root, ignore_errors=True)
+    return scaling
 
 
 if __name__ == "__main__":

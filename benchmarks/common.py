@@ -1,10 +1,35 @@
-"""Shared benchmark utilities: Orion-like dataset cache, CSV emission."""
+"""Shared benchmark utilities: Orion-like dataset cache, record emission.
+
+Every measurement flows through :func:`emit`, which both prints the
+historical ``name,value,derived`` CSV line and appends a machine-readable
+record to :data:`RECORDS`. The record schema — ``name`` / ``value`` /
+``unit`` / ``repeats`` / ``derived`` — is shared by ``benchmarks/run.py
+--json`` and the CI-archived ``BENCH_*.json`` trajectory files, so every
+PR's bench artifact is comparable to every other's.
+"""
 from __future__ import annotations
 
 import functools
+import os
+import tempfile
 import time
 
-import numpy as np
+#: machine-readable benchmark records accumulated by :func:`emit`
+RECORDS: list[dict] = []
+
+
+def scratch_dir(prefix: str) -> str:
+    """mkdtemp on a local tmpfs when one exists.
+
+    Containers often mount ``/tmp`` on a network filesystem (9p,
+    overlay), whose serialization artifacts would drown the I/O effects
+    the benchmarks measure; ``/dev/shm`` is reliably local.
+    ``BENCH_TMPDIR`` overrides the choice.
+    """
+    for cand in (os.environ.get("BENCH_TMPDIR"), "/dev/shm"):
+        if cand and os.path.isdir(cand) and os.access(cand, os.W_OK):
+            return tempfile.mkdtemp(prefix=prefix, dir=cand)
+    return tempfile.mkdtemp(prefix=prefix)
 
 
 @functools.lru_cache(maxsize=2)
@@ -25,8 +50,18 @@ def orion_domains(n_domains: int = 16, max_level: int = 8, seed: int = 7):
     return tree, locals_, pruned
 
 
-def emit(name: str, us_per_call: float, derived: str):
-    print(f"{name},{us_per_call:.1f},{derived}")
+def emit(name: str, value: float, derived: str = "", *,
+         unit: str = "us_per_call", repeats: int | None = None) -> dict:
+    """Record one measurement and print the CSV line.
+
+    ``value`` keeps the historical meaning (µs per call unless ``unit``
+    says otherwise); ``derived`` is the free-text context column.
+    """
+    rec = {"name": name, "value": float(value), "unit": unit,
+           "repeats": repeats, "derived": derived}
+    RECORDS.append(rec)
+    print(f"{name},{value:.1f},{derived}")
+    return rec
 
 
 def timeit(fn, *args, reps: int = 3, **kw):

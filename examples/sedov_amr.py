@@ -30,25 +30,32 @@ N_DOMAINS = 8
 
 def run_insitu(tree, g):
     """Opt-in: drive the in-transit engine with the generated tree and
-    check its catalog slice against the post-hoc assembly ``g``."""
+    check its catalog slice against the post-hoc assembly ``g`` — first
+    single-writer, then partitioned over contributor groups with the
+    reduced domains merged back at read."""
     from repro.insitu import Catalog, InTransitEngine, SliceReducer
     print("== in-transit flow (--insitu)")
-    shutil.rmtree(INSITU_ROOT, ignore_errors=True)
-    slicer = SliceReducer(field="density", axis=2, position=0.5,
-                          resolution=128)
-    engine = InTransitEngine(INSITU_ROOT, [slicer],
-                             policy="drop-oldest").start()
-    engine.submit(0, tree)
-    engine.close()
-    cat = Catalog(INSITU_ROOT)
-    img = cat.query(0, slicer.name)["image"]
     ref = analysis.slice_image(g, "density", axis=2, position=0.5,
                                resolution=128)
-    match = np.array_equal(img, ref, equal_nan=True)
-    print(f"   reduced contexts: {cat.steps()}, slice matches "
-          f"post-hoc assembly: {match}")
-    cat.query(0, slicer.name)
-    print(f"   cache: {cat.cache_info()}")
+    for groups in (1, 2):
+        root = INSITU_ROOT if groups == 1 else f"{INSITU_ROOT}_md{groups}"
+        shutil.rmtree(root, ignore_errors=True)
+        slicer = SliceReducer(field="density", axis=2, position=0.5,
+                              resolution=128)
+        engine = InTransitEngine(root, [slicer], policy="drop-oldest",
+                                 domains=groups).start()
+        engine.submit(0, tree)
+        engine.close()
+        cat = Catalog(root)
+        img = cat.query(0, slicer.name)["image"]
+        match = np.array_equal(img, ref, equal_nan=True)
+        doms = cat.domains(0, slicer.name)
+        print(f"   [domains={groups}] reduced contexts: {cat.steps()}, "
+              f"written domains: {doms}, merged slice matches "
+              f"post-hoc assembly: {match}")
+        cat.query(0, slicer.name)
+        print(f"   [domains={groups}] cache: {cat.cache_info()}")
+        assert match, "in-transit slice diverged from post-hoc assembly"
 
 
 def main():

@@ -97,17 +97,22 @@ def threshold(tree: AMRTree, field: str, lo: float = -np.inf,
 
 
 def slice_image(tree: AMRTree, field: str, *, axis: int = 2,
-                position: float = 0.5, resolution: int = 256) -> np.ndarray:
+                position: float = 0.5, resolution: int = 256,
+                owned_only: bool = False) -> np.ndarray:
     """Rasterize an axis-aligned slice through the AMR tree.
 
     Each output pixel takes the value of the deepest leaf covering it —
-    the HyperTreeGrid slice semantics.
+    the HyperTreeGrid slice semantics. With ``owned_only`` only owned
+    leaves paint (contributor-partition trees: per-domain images then
+    tile by extent back to the global slice, NaN where not owned).
     """
     img = np.full((resolution, resolution), np.nan)
     depth = np.full((resolution, resolution), -1, np.int32)
     levels = tree.levels()
     v = tree.fields[field]
     leaves = np.flatnonzero(~tree.refine)
+    if owned_only:
+        leaves = leaves[tree.owner[leaves]]
     ax_u, ax_v = [a for a in range(3) if a != axis]
     for lvl in range(tree.n_levels):
         sel = leaves[levels[leaves] == lvl]

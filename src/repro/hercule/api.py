@@ -410,10 +410,29 @@ class AnalysisKind(ObjectKind):
 
 
 class ReducedKind(ObjectKind):
-    """In-transit reduction outputs (``reduced/<reducer>/<name>``)."""
+    """In-transit reduction outputs (``reduced/<reducer>/<name>``).
+
+    One reduced object may span several Hercule domains: each contributor
+    group of a multi-domain engine writes its part of the reduction as
+    its own domain within the shared context, and reads merge them back
+    (the paper's per-producer write + deferred-merge shape). Merge
+    semantics are *per reducer* and registered by name on this kind —
+    see :meth:`register_merge`; contexts written by the in-transit
+    engine record each reducer's strategy in
+    ``attrs["insitu"]["merge"]``, so merged reads are self-describing.
+    """
 
     name = "reduced"
     prefix = "reduced/"
+
+    #: merge-strategy registry: name -> fn({domain: {array: ndarray}})
+    #: -> {array: ndarray}; the input dict is ordered by domain id
+    MERGES: dict[str, object] = {}
+
+    @classmethod
+    def register_merge(cls, name: str, fn) -> None:
+        """Register a named merge strategy for multi-domain reads."""
+        cls.MERGES[name] = fn
 
     def parse(self, record_name: str) -> dict:
         reducer, _, array = record_name[len(self.prefix):].partition("/")
@@ -430,20 +449,93 @@ class ReducedKind(ObjectKind):
                                     self.record_name(reducer, aname),
                                     arr, compress)
 
-    def assemble(self, view: ContextView, domain: int = 0, *,
-                 reducer: str, **opts) -> dict[str, np.ndarray]:
+    def assemble(self, view: ContextView, domain: int | None = 0, *,
+                 reducer: str, strategy: str | None = None, domains=None,
+                 **opts) -> dict[str, np.ndarray]:
+        """Assemble one reduced object.
+
+        ``domain=None`` merges the object across every contributing
+        domain (optionally restricted to ``domains``) using the merge
+        strategy resolved from the explicit ``strategy`` argument or the
+        context's ``attrs["insitu"]["merge"]``. A single contributing
+        domain is returned as-is — the degenerate case is bit-for-bit
+        the per-domain read, no strategy needed.
+        """
+        if domain is not None:
+            prefix = f"reduced/{reducer}/"
+            recs = [r for r in view.select(domains=domain)
+                    if r.name.startswith(prefix)]
+            if not recs:
+                raise KeyError(
+                    f"no reduced object {reducer!r} in context {view.step}")
+            arrays = view.read_records(recs)
+            return {r.name[len(prefix):]: a for r, a in zip(recs, arrays)}
+        objs = self.read_parts(view, reducer, domains=domains)
+        return self.merge(view, reducer, objs, strategy=strategy)
+
+    def read_parts(self, view: ContextView, reducer: str, *, domains=None
+                   ) -> dict[int, dict[str, np.ndarray]]:
+        """Per-domain reduced objects: read_merged semantics, one batch.
+
+        All of the reducer's records across domains decode in a single
+        :meth:`ContextView.read_records` call (fanning out on the db's
+        ``io_threads`` pool above ``PARALLEL_MIN_BYTES``) instead of one
+        domain-merged gather per array name.
+        """
         prefix = f"reduced/{reducer}/"
-        recs = [r for r in view.select(domains=domain)
-                if r.name.startswith(prefix)]
+        recs = [r for n, rs in view._by_name.items()
+                if n.startswith(prefix) for r in rs]
         if not recs:
             raise KeyError(
                 f"no reduced object {reducer!r} in context {view.step}")
+        if domains is not None:
+            want = {int(d) for d in domains}
+            recs = [r for r in recs if r.domain in want]
+            if not recs:
+                raise KeyError(
+                    f"no reduced object {reducer!r} in context {view.step} "
+                    f"for domains {sorted(want)}")
         arrays = view.read_records(recs)
-        return {r.name[len(prefix):]: a for r, a in zip(recs, arrays)}
+        objs: dict[int, dict[str, np.ndarray]] = {}
+        for rec, arr in zip(recs, arrays):
+            objs.setdefault(rec.domain, {})[rec.name[len(prefix):]] = arr
+        return {d: objs[d] for d in sorted(objs)}
+
+    def merge(self, view: ContextView, reducer: str,
+              objs: dict[int, dict[str, np.ndarray]], *,
+              strategy: str | None = None) -> dict[str, np.ndarray]:
+        """Merge per-domain objects into one (identity for one domain)."""
+        if len(objs) == 1:
+            return next(iter(objs.values()))
+        if strategy is None:
+            strategy = self.merge_strategy_of(view, reducer)
+        if strategy is None:
+            raise ValueError(
+                f"reduced object {reducer!r} spans {len(objs)} domains but "
+                f"declares no merge strategy; pass strategy=... or write "
+                f"attrs['insitu']['merge'] (registered: {sorted(self.MERGES)})")
+        fn = self.MERGES.get(strategy)
+        if fn is None:
+            raise ValueError(
+                f"unknown merge strategy {strategy!r}; "
+                f"registered: {sorted(self.MERGES)}")
+        return fn(objs)
+
+    def merge_strategy_of(self, view: ContextView, reducer: str
+                          ) -> str | None:
+        """Strategy recorded by the writer (engine attrs), if any."""
+        merge = view.attrs.get("insitu", {}).get("merge", {})
+        return merge.get(reducer)
 
     def reducers_in(self, view: ContextView) -> list[str]:
         return sorted({self.parse(n)["reducer"] for n in view._by_name
                        if self.match(n)})
+
+    def domains_in(self, view: ContextView, reducer: str) -> list[int]:
+        """Domains contributing to one reduced object."""
+        prefix = f"reduced/{reducer}/"
+        return sorted({r.domain for n, rs in view._by_name.items()
+                       if n.startswith(prefix) for r in rs})
 
 
 class CkptShardKind(ObjectKind):
@@ -505,6 +597,146 @@ REDUCED = register_kind(ReducedKind())
 CKPT_SHARD = register_kind(CkptShardKind(), fallback=True)
 
 
+# ----------------------------------------------- built-in merge strategies
+#
+# Each strategy implements the full merge semantics of one reducer family
+# over per-domain objects produced from *disjoint* contributor partitions
+# (each owned element contributed by exactly one domain):
+#
+#   sum       elementwise sum of every array (column-density projections)
+#   max       elementwise maximum (depth/max image compositing)
+#   hist      sum per-level counts, rows zero-padded; bin edges must agree
+#   tile      NaN-background images tiled by extent (axis slices)
+#   assemble  AMR-tree arrays merged by (level, coords), owned copies win
+#             (level-of-detail cuts: concatenate + re-sort in Morton/BFS)
+#   concat    row-concatenate arrays keyed by a "names" axis, re-sorted
+#             (tensor-norm tables)
+#   union     dict union of disjointly-named arrays (spectra)
+
+def _each_name(objs):
+    seen: dict[str, None] = {}
+    for obj in objs.values():
+        for n in obj:
+            seen.setdefault(n)
+    return list(seen)
+
+
+def _merge_sum(objs):
+    return {n: sum(o[n] for o in objs.values() if n in o)
+            for n in _each_name(objs)}
+
+
+def _merge_max(objs):
+    out = {}
+    for n in _each_name(objs):
+        arrs = [o[n] for o in objs.values() if n in o]
+        acc = arrs[0]
+        for a in arrs[1:]:
+            acc = np.fmax(acc, a)
+        out[n] = acc
+    return out
+
+
+def _merge_hist(objs):
+    parts = list(objs.values())
+    edges = [p["edges"] for p in parts]
+    if any(not np.array_equal(edges[0], e) for e in edges[1:]):
+        raise ValueError(
+            "histogram bin edges differ across domains (auto lo/hi bounds "
+            "are per-partition); use fixed lo/hi bounds for multi-domain "
+            "histogram reduction")
+    hists = [p["hist"] for p in parts]
+    rows = max(h.shape[0] for h in hists)
+    acc = np.zeros((rows,) + hists[0].shape[1:], hists[0].dtype)
+    for h in hists:
+        acc[:h.shape[0]] += h
+    return {"hist": acc, "edges": edges[0]}
+
+
+def _merge_tile(objs):
+    """Overlay NaN-background arrays: first non-NaN per element wins.
+
+    Disjoint contributor partitions paint disjoint extents (shared
+    pixels, e.g. demoted coarse nodes, carry identical restricted
+    values), so overlay order does not matter.
+    """
+    out = {}
+    for n in _each_name(objs):
+        acc = None
+        for o in objs.values():
+            if n not in o:
+                continue
+            a = o[n]
+            if acc is None:
+                acc = np.array(a, copy=True)
+            elif acc.dtype.kind == "f":
+                hole = np.isnan(acc)
+                acc[hole] = a[hole]
+            elif not np.array_equal(acc, a):
+                raise ValueError(
+                    f"cannot tile non-float array {n!r} with conflicting "
+                    "values across domains")
+        out[n] = acc
+    return out
+
+
+def _merge_assemble(objs):
+    from ..core.amr import AMRTree   # lazy: api is imported by core users
+    from . import analysis
+    trees = [AMRTree.from_arrays(o) for o in objs.values()]
+    return dict(analysis.assemble(trees).to_arrays())
+
+
+def _merge_concat(objs):
+    parts = list(objs.values())
+    if any("names" not in p for p in parts):
+        raise ValueError(
+            "'concat' merge needs a 'names' array in every domain part")
+    names = np.concatenate([np.asarray(p["names"]) for p in parts])
+    order = np.argsort(names, kind="stable")
+    out = {"names": names[order]}
+    for n in _each_name(objs):
+        if n == "names":
+            continue
+        arrs = [p[n] for p in parts if n in p]
+        identical = all(np.array_equal(arrs[0], a) for a in arrs[1:])
+        aligned = len(arrs) == len(parts) and all(
+            a.shape[:1] == np.asarray(p["names"]).shape[:1]
+            for a, p in zip(arrs, parts))
+        # a constant *string* side table (e.g. stat_names) can
+        # coincidentally have as many rows as each part owns names —
+        # identity wins there; numeric rows that merely happen to be
+        # equal (zero-init layers) still concatenate with the names
+        if aligned and (not identical or arrs[0].dtype.kind not in "US"):
+            out[n] = np.concatenate(arrs)[order]
+        elif identical:
+            out[n] = arrs[0]
+        else:
+            raise ValueError(
+                f"array {n!r} is neither row-aligned with 'names' nor "
+                "identical across domains")
+    return out
+
+
+def _merge_union(objs):
+    out: dict[str, np.ndarray] = {}
+    for dom, obj in objs.items():
+        for n, a in obj.items():
+            if n in out and not np.array_equal(out[n], a):
+                raise ValueError(
+                    f"'union' merge found conflicting values for {n!r} "
+                    f"(domain {dom})")
+            out.setdefault(n, a)
+    return out
+
+
+for _name, _fn in (("sum", _merge_sum), ("max", _merge_max),
+                   ("hist", _merge_hist), ("tile", _merge_tile),
+                   ("assemble", _merge_assemble), ("concat", _merge_concat),
+                   ("union", _merge_union)):
+    ReducedKind.register_merge(_name, _fn)
+
+
 # ------------------------------------------------------- object-level API
 
 def write_object(ctx, kind: str, domain: int, payload, **opts) -> None:
@@ -515,9 +747,14 @@ def write_object(ctx, kind: str, domain: int, payload, **opts) -> None:
     KINDS[kind].write(ctx, domain, payload, **opts)
 
 
-def read_object(db: HerculeDB, step: int, kind: str, domain: int = 0,
-                **opts):
-    """Assemble one typed object from a context's records."""
+def read_object(db: HerculeDB, step: int, kind: str,
+                domain: int | None = 0, **opts):
+    """Assemble one typed object from a context's records.
+
+    For the ``reduced`` kind, ``domain=None`` returns the object merged
+    across every contributing domain (see
+    :meth:`ReducedKind.assemble`); other kinds require a concrete domain.
+    """
     if kind not in KINDS:
         raise ValueError(f"unknown object kind {kind!r}; "
                          f"registered: {sorted(KINDS)}")

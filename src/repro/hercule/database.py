@@ -310,6 +310,19 @@ class HerculeDB:
                     thread_name_prefix="hercule-read")
             return self._read_pool
 
+    def flush_domain(self, domain: int) -> None:
+        """fsync the group file holding ``domain``'s appended records.
+
+        Lets each contributor flush its own group independently (and in
+        parallel with other groups) instead of funneling every group's
+        fsync through the single finalize call — the finalize flush then
+        finds those pages already clean.
+        """
+        with self._glock:
+            gf = self._groups.get(self.group_of(domain))
+        if gf is not None:
+            gf.flush()
+
     def read_payload(self, rec: Record) -> bytes:
         with open(os.path.join(self.root, "data", rec.file), "rb") as f:
             f.seek(rec.offset)
@@ -363,7 +376,17 @@ class ContextWriter:
     def write_array(self, domain: int, name: str, arr: np.ndarray, *,
                     codec: str = "raw", meta: dict | None = None) -> None:
         arr = np.ascontiguousarray(arr)
-        self.write_bytes(domain, name, arr.tobytes(), dtype=str(arr.dtype),
+        # hand the buffered writer the array's own buffer: no tobytes()
+        # memcpy (which would hold the GIL for the whole copy), and the
+        # actual write syscall runs GIL-released — parallel contributor
+        # lanes overlap their appends
+        try:
+            payload = arr.data.cast("B")
+        except (TypeError, ValueError, BufferError):
+            # zero-in-shape views can't cast; extension dtypes
+            # (bfloat16) can't export a buffer at all
+            payload = arr.tobytes()
+        self.write_bytes(domain, name, payload, dtype=str(arr.dtype),
                          shape=arr.shape, codec=codec, meta=meta)
 
     def submit(self, fn, *args) -> None:

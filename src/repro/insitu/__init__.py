@@ -5,23 +5,29 @@ state for post-hoc processing, the compute flow stages snapshots to an
 analysis flow that reduces them to purpose-specific lightweight objects
 written at an independent cadence.
 
-    compute --push--> StagingArea --pop--> InTransitEngine(ReducerDAG)
+    compute --push--> StagingArea(group g) --pop--> worker lane g
+                           (one per contributor group)   |
+                                      reduced domain g of the shared
+                                           per-step HDep context
                                                   |
-                                       HDep reduced contexts
-                                                  |
-                many viewers  <--LRU cache--   Catalog
+                many viewers  <--LRU cache--   Catalog (merge-at-read)
 
-  * :mod:`staging`  — double-buffered device→host hand-off with a bounded
+  * :mod:`staging`   — double-buffered device→host hand-off with a bounded
     queue and explicit backpressure (``block``/``drop-oldest``/``subsample``).
-  * :mod:`reducers` — composable reduction operators over AMR trees and
-    train states, combined in a DAG.
-  * :mod:`engine`   — worker pool consuming staged snapshots and writing
-    reduced HDep objects at its own output frequency.
-  * :mod:`catalog`  — the read side: cached queries for many concurrent
-    viewers.
+  * :mod:`partition` — contributor-group split of a staged step (Hilbert
+    leaf assignment for AMR trees, name striping for tensors).
+  * :mod:`reducers`  — composable reduction operators over AMR trees and
+    train states, combined in a DAG; each declares its multi-domain
+    merge strategy.
+  * :mod:`engine`    — per-group worker lanes consuming staged snapshots
+    and writing reduced HDep domains at the engine's own output
+    frequency.
+  * :mod:`catalog`   — the read side: cached, domain-merged queries for
+    many concurrent viewers.
 """
 from .catalog import Catalog                                   # noqa: F401
 from .engine import InTransitEngine                            # noqa: F401
+from .partition import partition_snapshot                      # noqa: F401
 from .reducers import (LevelHistogramReducer, LODCutReducer,   # noqa: F401
                        ProjectionReducer, Reducer, ReducerDAG,
                        SliceReducer, SpectraReducer, TensorNormReducer)

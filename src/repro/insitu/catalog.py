@@ -78,14 +78,24 @@ class Catalog:
             kw["kinds"] = "reduced"
         return api.scan(self.db, selector, **kw)
 
+    def domains(self, step: int, reducer: str) -> list[int]:
+        """Contributor domains holding parts of one reduced object."""
+        return api.REDUCED.domains_in(self.db.view(step), reducer)
+
     # ---------------------------------------------------------------- query
     def query(self, step: int, reducer: str, *,
-              region=None, domain: int = 0) -> dict[str, np.ndarray]:
+              region=None, domain: int | None = None
+              ) -> dict[str, np.ndarray]:
         """Fetch one reduced object, optionally cropped to ``region``.
 
+        ``domain=None`` (the default) transparently merges the object
+        across every contributing domain using the reducer's registered
+        merge strategy — on a single-domain database this is bit-for-bit
+        the plain read. Pass a concrete domain for one group's part.
+
         Contexts are immutable once finalized, so cached entries never go
-        stale. The full object is what gets cached; region crops are views
-        of the cached arrays.
+        stale. The full (merged) object is what gets cached; region crops
+        are views of the cached arrays.
         """
         region = _normalize_region(region)
         key = (step, reducer, domain)
@@ -119,14 +129,16 @@ class Catalog:
 
         A Selector scan finds the contexts actually holding the record
         (index lookups, no decoding); values are then served through the
-        cached :meth:`query` path. ``reducer``/``name`` are compared as
-        exact strings — glob characters in them are literal.
+        cached (domain-merged) :meth:`query` path — a context whose
+        record lives in several contributor domains appears once.
+        ``reducer``/``name`` are compared as exact strings — glob
+        characters in them are literal.
         """
         target = f"reduced/{reducer}/{name}"
-        sel = api.Selector(steps=steps, domains=0, kinds="reduced")
+        sel = api.Selector(steps=steps, kinds="reduced")
         out_steps, vals = [], []
         for ref in api.scan(self.db, sel):
-            if ref.record.name != target:
+            if ref.record.name != target or ref.step in out_steps[-1:]:
                 continue
             out_steps.append(ref.step)
             vals.append(self.query(ref.step, reducer)[name])

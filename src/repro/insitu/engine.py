@@ -2,50 +2,94 @@
 
 ``InTransitEngine`` sits between the compute flow and an HDep database:
 compute calls :meth:`submit` (or :meth:`submit_state` for train states)
-and returns immediately; a worker pool drains the staging area, runs the
-reducer DAG and writes each snapshot's reduced objects as one HDep
+and returns immediately; worker lanes drain the staging areas, run the
+reducer DAG and write each snapshot's reduced objects as one HDep
 context. The engine has its *own* output frequency (``output_every``),
 independent of HProt checkpoint cadence — the paper's "different output
 frequencies" between the protection and post-processing flows.
 
-Contexts written here carry ``attrs["insitu"]`` with the reducer names
-and staging statistics, so a catalog (or a human) can see what was
-reduced and what back-pressure did to the cadence.
+With ``domains > 1`` the engine runs the paper's per-producer shape
+inside one process: each submitted step is partitioned over contributor
+groups (``insitu.partition``), every group owns its own
+:class:`StagingArea` and worker lane, and each group writes its part of
+the reduction as its *own Hercule domain* within the shared per-step
+context — no single-writer funnel. The context finalizes when the last
+group's part lands (or is dropped by backpressure); reads merge the
+domains back (``hercule.api.ReducedKind``), so a context with some parts
+dropped still serves its surviving domains.
+
+Contexts written here carry ``attrs["insitu"]`` with the reducer names,
+the per-reducer merge strategies, the contributing domains and staging
+statistics, so a catalog (or a human) can see what was reduced and what
+back-pressure did to the cadence.
 """
 from __future__ import annotations
 
+import dataclasses
 import threading
 
 from ..core.amr import AMRTree
 from ..hercule import api
 from ..hercule.database import HerculeDB
+from .partition import partition_snapshot
 from .reducers import Reducer, ReducerDAG
-from .staging import StagingArea
+from .staging import Snapshot, StagingArea
+
+
+@dataclasses.dataclass
+class _PendingStep:
+    """Countdown of contributor parts still in flight for one step."""
+    remaining: int
+    ctx: object = None                # ContextWriter, begun lazily
+    kind: str = ""
+    meta: dict = dataclasses.field(default_factory=dict)
+    wrote: set = dataclasses.field(default_factory=set)      # domains
+    reducers: set = dataclasses.field(default_factory=set)
+    finalizing: bool = False          # countdown done, manifest pending
 
 
 class InTransitEngine:
-    """Worker pool turning staged snapshots into reduced HDep objects."""
+    """Worker lanes turning staged snapshots into reduced HDep objects."""
 
     def __init__(self, root: str | HerculeDB, reducers: list[Reducer], *,
                  output_every: int = 1, workers: int = 1,
                  queue_capacity: int = 4, policy: str = "drop-oldest",
-                 ncf: int = 4, compress: bool = False):
+                 ncf: int = 4, compress: bool = False, domains: int = 1,
+                 durable_parts: bool = False):
         self.db = root if isinstance(root, HerculeDB) else \
             HerculeDB.create(root, kind="hdep", ncf=ncf)
         self.dag = ReducerDAG(reducers)
         self.compress = compress
         self.output_every = max(1, output_every)
-        self.staging = StagingArea(
-            capacity=queue_capacity, policy=policy,
-            n_buffers=queue_capacity + workers + 1)
+        self.n_domains = max(1, domains)
+        #: fsync each group file from its own lane right after the part
+        #: lands (parallel durability on storage with scalable sync);
+        #: off = PR-1 semantics, durability at context finalize only
+        self.durable_parts = durable_parts
+        self._merge_map = {r.name: r.merge for r in self.dag
+                           if getattr(r, "merge", None)}
+        #: one staging area per contributor group; ``staging`` aliases
+        #: group 0 for the single-group API the compute side always had
+        self.stages = [
+            StagingArea(capacity=queue_capacity, policy=policy,
+                        n_buffers=queue_capacity + max(1, workers) + 1,
+                        on_evict=self._on_evict)
+            for _ in range(self.n_domains)]
+        self.staging = self.stages[0]
         self._threads = [
-            threading.Thread(target=self._worker, name=f"insitu-{i}",
-                             daemon=True)
+            threading.Thread(target=self._worker, args=(area,),
+                             name=f"insitu-g{g}-{i}", daemon=True)
+            for g, area in enumerate(self.stages)
             for i in range(max(1, workers))]
         self._errors: list[BaseException] = []
+        self._pending: dict[int, _PendingStep] = {}
+        #: completed steps whose finalize was deferred off the compute
+        #: thread (eviction can complete a countdown inside submit();
+        #: the manifest fsync must not run there)
+        self._deferred: list[tuple[int, _PendingStep]] = []
         self._written: list[int] = []
         self._failed = 0
-        self._skipped = 0          # snapshots no reducer applied to
+        self._skipped = 0          # snapshot parts no reducer applied to
         self._wlock = threading.Lock()
         self._started = False
 
@@ -63,8 +107,9 @@ class InTransitEngine:
 
         ``payload`` is an :class:`AMRTree`, or a dict of arrays (device or
         host). Steps off the engine's output cadence are ignored without
-        staging cost; otherwise the configured backpressure policy
-        decides. Returns True iff the snapshot was staged.
+        staging cost; otherwise the payload is partitioned over the
+        contributor groups and each part staged under the configured
+        backpressure policy. Returns True iff any part was staged.
         """
         self.check_errors()
         if not self._started:
@@ -74,7 +119,91 @@ class InTransitEngine:
         if isinstance(payload, AMRTree):
             payload = payload.to_arrays()
             kind = "amr"
-        return self.staging.push(step, payload, kind=kind, meta=meta)
+        parts = partition_snapshot(payload, kind, self.n_domains)
+        return self._stage_parts(step, parts, kind, meta)
+
+    def submit_parts(self, step: int, parts, *, kind: str = "amr",
+                     meta: dict | None = None) -> bool:
+        """Per-producer hand-off: stage pre-partitioned contributor parts.
+
+        ``parts`` holds one payload (array dict or :class:`AMRTree`) per
+        contributor group — the shape real multi-producer runs have,
+        where each producer already owns its domain and no runtime
+        partition is needed. ``len(parts)`` must equal the engine's
+        ``domains``. Cadence and backpressure behave exactly as in
+        :meth:`submit`; returns True iff any part was staged.
+        """
+        self.check_errors()
+        if not self._started:
+            self.start()
+        if step % self.output_every != 0:
+            return False
+        if len(parts) != self.n_domains:
+            raise ValueError(
+                f"got {len(parts)} parts for {self.n_domains} contributor "
+                f"group(s)")
+        parts = [p.to_arrays() if isinstance(p, AMRTree) else p
+                 for p in parts]
+        return self._stage_parts(step, parts, kind, meta)
+
+    def submit_part(self, step: int, domain: int, payload, *,
+                    kind: str = "amr", meta: dict | None = None) -> bool:
+        """One producer's hand-off of its own contributor part.
+
+        The fully per-producer shape: each of the ``domains`` producers
+        (e.g. one thread per simulated MPI rank) stages its own part
+        into its own group's staging area, concurrently with the others
+        — no shared hand-off thread. The step's context finalizes once
+        all ``domains`` parts have settled, so *every* producer must
+        call this for every on-cadence step (backpressure drops count
+        as settled; a producer that skips a step leaks the context).
+        """
+        self.check_errors()
+        if not self._started:
+            self.start()
+        if step % self.output_every != 0:
+            return False
+        if not 0 <= domain < self.n_domains:
+            raise ValueError(f"domain {domain} outside the engine's "
+                             f"{self.n_domains} contributor group(s)")
+        if isinstance(payload, AMRTree):
+            payload = payload.to_arrays()
+        with self._wlock:
+            pend = self._pending.get(step)
+            if pend is None or pend.finalizing:
+                # absent, or a previous submission's context is already
+                # mid-finalize: this part belongs to a fresh countdown
+                self._pending[step] = _PendingStep(remaining=self.n_domains)
+        ok = self.stages[domain].push(step, payload, kind=kind, meta=meta,
+                                      domain=domain,
+                                      n_domains=self.n_domains)
+        if not ok:
+            self._part_done(step, None, None, defer_finalize=True)
+        return ok
+
+    def _stage_parts(self, step: int, parts, kind: str,
+                     meta: dict | None) -> bool:
+        # register before the first push: a fast worker lane may finish
+        # its part while later parts are still being staged
+        with self._wlock:
+            pend = self._pending.get(step)
+            if pend is None or pend.finalizing:
+                # a finalizing pend is already off the countdown: the
+                # resubmission gets its own entry (and so its own
+                # ContextWriter — never append to a mid-serialization
+                # manifest); the stale entry pops itself by identity
+                self._pending[step] = _PendingStep(remaining=len(parts))
+            else:                      # resubmitted step: extend the countdown
+                pend.remaining += len(parts)
+        staged_any = False
+        for g, part in enumerate(parts):
+            ok = self.stages[g].push(step, part, kind=kind, meta=meta,
+                                     domain=g, n_domains=self.n_domains)
+            if ok:
+                staged_any = True
+            else:
+                self._part_done(step, None, None, defer_finalize=True)
+        return staged_any
 
     def submit_state(self, step: int, state, *, prefix: str = "params"
                      ) -> bool:
@@ -95,11 +224,20 @@ class InTransitEngine:
         return self.submit(step, arrays, kind="tensors")
 
     # ---------------------------------------------------------- analysis side
-    def _worker(self):
+    def _on_evict(self, snap: Snapshot) -> None:
+        """A queued part was displaced by drop-oldest backpressure.
+
+        Runs on the pushing (compute) thread, so a completed countdown
+        is deferred — worker lanes and :meth:`drain` commit it.
+        """
+        self._part_done(snap.step, None, None, defer_finalize=True)
+
+    def _worker(self, area: StagingArea):
         while True:
-            snap = self.staging.pop(timeout=0.25)
+            snap = area.pop(timeout=0.25)
             if snap is None:
-                if self.staging.closed and len(self.staging) == 0:
+                self._run_deferred()
+                if area.closed and len(area) == 0:
                     return
                 continue
             try:
@@ -108,29 +246,101 @@ class InTransitEngine:
                 self._errors.append(e)
                 with self._wlock:
                     self._failed += 1
+                self._part_done(snap.step, None, None)
             finally:
-                self.staging.release(snap)
+                area.release(snap)
+            self._run_deferred()
 
-    def _reduce_and_write(self, snap):
+    def _reduce_and_write(self, snap: Snapshot):
         outputs = self.dag.run(snap)
         if not outputs:
             # no reducer accepted this snapshot kind — don't litter the
             # database with empty contexts; surface it via stats instead
             with self._wlock:
                 self._skipped += 1
+            self._part_done(snap.step, None, None)
             return
-        ctx = self.db.begin_context(snap.step)
-        for rname, arrays in outputs.items():
-            api.write_object(ctx, "reduced", 0, arrays, reducer=rname,
-                             compress=self.compress)
-        ctx.finalize(attrs={"insitu": {
-            "kind": snap.kind,
-            "reducers": sorted(outputs),
-            "staging": self.staging.stats.as_dict(),
-            **snap.meta,
-        }})
         with self._wlock:
-            self._written.append(snap.step)
+            pend = self._pending.get(snap.step)
+            if pend is not None and pend.ctx is None:
+                pend.ctx = self.db.begin_context(snap.step)
+                pend.kind = snap.kind
+                pend.meta = snap.meta
+            ctx = pend.ctx if pend is not None else None
+        if ctx is None:   # lone part of an already-settled step (shouldn't
+            return        # happen; guards against double accounting)
+        for rname, arrays in outputs.items():
+            api.write_object(ctx, "reduced", snap.domain, arrays,
+                             reducer=rname, compress=self.compress)
+        if self.durable_parts:
+            # each lane makes its own group durable: group fsyncs overlap
+            # across lanes instead of queueing serially behind finalize
+            self.db.flush_domain(snap.domain)
+        self._part_done(snap.step, snap.domain, set(outputs))
+
+    def _part_done(self, step: int, domain: int | None,
+                   reducers: set | None, *,
+                   defer_finalize: bool = False) -> None:
+        """One contributor part settled (written, dropped, or failed).
+
+        The pending entry survives until the manifest is committed, so
+        :meth:`drain` cannot return while a context is mid-finalize.
+        """
+        with self._wlock:
+            pend = self._pending.get(step)
+            if pend is None or pend.finalizing:
+                return
+            pend.remaining -= 1
+            if domain is not None:
+                pend.wrote.add(domain)
+                pend.reducers |= reducers
+            if pend.remaining > 0:
+                return
+            pend.finalizing = True
+            if pend.ctx is None:        # every part dropped/skipped: no
+                del self._pending[step]  # context, nothing to commit
+                return
+            if defer_finalize:
+                self._deferred.append((step, pend))
+                return
+        self._finalize_step(step, pend)
+
+    def _finalize_step(self, step: int, pend: _PendingStep) -> None:
+        """Commit one completed context; errors surface via check_errors."""
+        staging = self.stages[0].stats.as_dict() if self.n_domains == 1 \
+            else [a.stats.as_dict() for a in self.stages]
+        try:
+            pend.ctx.finalize(attrs={"insitu": {
+                "kind": pend.kind,
+                "reducers": sorted(pend.reducers),
+                "merge": {r: self._merge_map[r]
+                          for r in sorted(pend.reducers)
+                          if r in self._merge_map},
+                "n_domains": self.n_domains,
+                "domains": sorted(pend.wrote),
+                "staging": staging,
+                **pend.meta,
+            }})
+        except BaseException as e:
+            self._errors.append(e)
+            with self._wlock:
+                self._failed += 1
+                if self._pending.get(step) is pend:   # a resubmission
+                    del self._pending[step]           # may own the slot
+            return
+        with self._wlock:
+            self._written.append(step)
+            if self._pending.get(step) is pend:
+                del self._pending[step]
+
+    def _run_deferred(self) -> None:
+        """Commit contexts whose countdown completed on a compute thread."""
+        while True:
+            with self._wlock:
+                if not self._deferred:
+                    return
+                step, pend = self._deferred.pop()
+            self._finalize_step(step, pend)
 
     # ----------------------------------------------------------------- admin
     @property
@@ -140,7 +350,7 @@ class InTransitEngine:
 
     @property
     def skipped_snapshots(self) -> int:
-        """Snapshots whose kind no reducer in the DAG accepted."""
+        """Snapshot parts whose kind no reducer in the DAG accepted."""
         with self._wlock:
             return self._skipped
 
@@ -150,18 +360,15 @@ class InTransitEngine:
                 from self._errors[0]
 
     def drain(self, timeout: float = 60.0) -> None:
-        """Block until every accepted snapshot was reduced (or failed)."""
+        """Block until every accepted part was reduced (or dropped)."""
         import time
         deadline = time.perf_counter() + timeout
         while True:
             self.check_errors()
+            self._run_deferred()
             with self._wlock:
-                done = len(self._written) + self._failed + self._skipped
-            stats = self.staging.stats
-            # accepted snapshots are either still queued/in-flight,
-            # were evicted by drop-oldest, or have been processed
-            if done + stats.evicted >= stats.accepted:
-                return
+                if not self._pending:
+                    return
             if time.perf_counter() > deadline:
                 raise TimeoutError("in-transit engine did not drain")
             time.sleep(0.005)
@@ -173,7 +380,8 @@ class InTransitEngine:
                 self.drain()
             except BaseException as e:
                 err = e
-        self.staging.close()
+        for area in self.stages:
+            area.close()
         if self._started:
             for t in self._threads:
                 t.join(timeout=30.0)
@@ -182,6 +390,7 @@ class InTransitEngine:
                 # leaked daemon thread beats a corrupted context
                 raise TimeoutError(
                     "in-transit workers did not stop; database left open")
+        self._run_deferred()   # evict-completed contexts with no lane left
         self.db.close()
         if err is not None:
             raise err

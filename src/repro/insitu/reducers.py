@@ -34,12 +34,17 @@ class Reducer:
     ``name`` doubles as the reduced-object key in HDep (and in catalog
     cache keys), so it encodes the parameters and may not contain ``/``.
     ``deps`` names upstream reducers whose outputs are passed in
-    ``upstream``.
+    ``upstream``. ``merge`` names the multi-domain merge strategy of this
+    reducer's outputs (``hercule.api.ReducedKind.MERGES``); a reducer on
+    a partitioned snapshot (``snap.n_domains > 1``) must contribute each
+    owned element exactly once so per-domain outputs merge back to the
+    single-domain answer.
     """
 
     name: str = "reducer"
     deps: tuple[str, ...] = ()
     kinds: tuple[str, ...] = ("amr",)   # snapshot kinds this reducer accepts
+    merge: str | None = None            # multi-domain merge strategy
 
     def reduce(self, snap: Snapshot,
                upstream: dict[str, dict[str, np.ndarray]]
@@ -65,6 +70,8 @@ class SliceReducer(Reducer):
     resolution: int = 256
     source: str | None = None      # optional upstream tree (e.g. a LOD cut)
 
+    merge = "tile"
+
     def __post_init__(self):
         self.name = (f"slice-{self.field}-ax{self.axis}-"
                      f"p{self.position:g}-r{self.resolution}")
@@ -76,7 +83,8 @@ class SliceReducer(Reducer):
         tree = self._source_tree(snap, upstream)
         img = analysis.slice_image(tree, self.field, axis=self.axis,
                                    position=self.position,
-                                   resolution=self.resolution)
+                                   resolution=self.resolution,
+                                   owned_only=snap.n_domains > 1)
         return {"image": img}
 
 
@@ -88,6 +96,8 @@ class ProjectionReducer(Reducer):
     axis: int = 2
     resolution: int = 256
     source: str | None = None
+
+    merge = "sum"
 
     def __post_init__(self):
         self.name = (f"proj-{self.field}-ax{self.axis}-r{self.resolution}")
@@ -102,6 +112,8 @@ class ProjectionReducer(Reducer):
         levels = tree.levels()
         v = tree.fields[self.field]
         leaves = np.flatnonzero(~tree.refine)
+        if snap.n_domains > 1:      # partitioned: integrate owned cells once
+            leaves = leaves[tree.owner[leaves]]
         ax_u, ax_v = [a for a in range(3) if a != self.axis]
         for l in range(tree.n_levels):
             sel = leaves[levels[leaves] == l]
@@ -131,6 +143,8 @@ class LevelHistogramReducer(Reducer):
     hi: float | None = None
     max_levels: int = 16
 
+    merge = "hist"
+
     def __post_init__(self):
         self.name = f"hist-{self.field}-b{self.bins}"
         if self.lo is not None or self.hi is not None:
@@ -144,6 +158,8 @@ class LevelHistogramReducer(Reducer):
         tree = self._source_tree(snap, upstream)
         v = tree.fields[self.field]
         leaf = ~tree.refine
+        if snap.n_domains > 1:      # partitioned: count owned leaves once
+            leaf &= tree.owner
         lo = float(v[leaf].min()) if self.lo is None else self.lo
         hi = float(v[leaf].max()) if self.hi is None else self.hi
         if hi <= lo:
@@ -169,6 +185,8 @@ class LODCutReducer(Reducer):
     """
 
     max_level: int = 4
+
+    merge = "assemble"
 
     def __post_init__(self):
         self.name = f"lod{self.max_level}"
@@ -196,6 +214,8 @@ class TensorNormReducer(Reducer):
     """
 
     STAT_NAMES = ("l2", "rms", "absmax", "mean")
+
+    merge = "concat"
 
     def __post_init__(self):
         self.name = "tnorm"
@@ -225,6 +245,8 @@ class SpectraReducer(Reducer):
     """Top-k singular values of each matrix-shaped tensor, jitted."""
 
     k: int = 8
+
+    merge = "union"
 
     def __post_init__(self):
         self.name = f"spectra-k{self.k}"

@@ -41,11 +41,19 @@ def to_host(arrays: dict) -> dict[str, np.ndarray]:
 
 @dataclasses.dataclass
 class Snapshot:
-    """One staged unit of work: host copies of the arrays of one step."""
+    """One staged unit of work: host copies of the arrays of one step.
+
+    ``domain``/``n_domains`` identify the contributor group this part
+    belongs to when the step was partitioned over groups (engine
+    ``domains > 1``); reducers use them to contribute each owned element
+    exactly once so per-group outputs merge back to the global answer.
+    """
     step: int
     kind: str                         # "amr" (tree arrays) | "tensors"
     arrays: dict[str, np.ndarray]
     meta: dict = dataclasses.field(default_factory=dict)
+    domain: int = 0                   # contributor group of this part
+    n_domains: int = 1                # groups the step was split into
     _bufset: "_BufferSet | None" = None
 
 
@@ -101,11 +109,15 @@ class StagingArea:
     """Bounded, policy-governed hand-off between compute and analysis."""
 
     def __init__(self, *, capacity: int = 4, policy: str = "drop-oldest",
-                 n_buffers: int | None = None):
+                 n_buffers: int | None = None, on_evict=None):
         assert policy in POLICIES, policy
         assert capacity >= 1
         self.capacity = capacity
         self.policy = policy
+        #: called with each evicted Snapshot *after* the area lock is
+        #: released (drop-oldest displacement only; push-time rejections
+        #: are visible to the caller through push's return value)
+        self.on_evict = on_evict
         # enough sets for every queue slot + one being filled + one being
         # reduced per consumer; sized generously by the engine.
         self._free: list[_BufferSet] = [
@@ -121,12 +133,26 @@ class StagingArea:
 
     # -------------------------------------------------------------- push
     def push(self, step: int, arrays: dict, *, kind: str = "amr",
-             meta: dict | None = None) -> bool:
+             meta: dict | None = None, domain: int = 0,
+             n_domains: int = 1) -> bool:
         """Stage one snapshot; returns False if it was dropped.
 
         Never blocks unless ``policy == "block"``. The arrays are copied
-        into a pooled host buffer set before return.
+        into a pooled host buffer set before return. ``on_evict``
+        callbacks for drop-oldest victims fire after the lock is
+        released, before push returns.
         """
+        victims: list[Snapshot] = []
+        try:
+            return self._push(step, arrays, kind, meta, domain, n_domains,
+                              victims)
+        finally:
+            if self.on_evict is not None:
+                for v in victims:
+                    self.on_evict(v)
+
+    def _push(self, step, arrays, kind, meta, domain, n_domains,
+              victims: list) -> bool:
         with self._lock:
             if self._closed:
                 raise RuntimeError("staging area is closed")
@@ -147,6 +173,7 @@ class StagingArea:
                     victim = self._queue.pop(0)
                     self._reclaim(victim)
                     self.stats.evicted += 1
+                    victims.append(victim)
                     continue
                 # subsample overflow (or drop-oldest with everything
                 # in-flight): reject the incoming snapshot
@@ -171,7 +198,8 @@ class StagingArea:
                 self._not_full.notify()
             raise
         snap = Snapshot(step=step, kind=kind, arrays=host,
-                        meta=dict(meta or {}), _bufset=bufset)
+                        meta=dict(meta or {}), domain=domain,
+                        n_domains=n_domains, _bufset=bufset)
         with self._lock:
             self.stats.buffer_reuses += reuses
             self.stats.buffer_allocs += allocs
@@ -182,6 +210,7 @@ class StagingArea:
                     victim = self._queue.pop(0)
                     self._reclaim(victim)
                     self.stats.evicted += 1
+                    victims.append(victim)
                 elif self.policy != "block":
                     self._reclaim(snap)
                     self.stats.dropped += 1

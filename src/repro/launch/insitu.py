@@ -18,8 +18,12 @@ from ..insitu import (Catalog, InTransitEngine, LevelHistogramReducer,
 from ..sim import amrgen, fields
 
 
-def default_reducers(resolution: int, lod: int):
+def default_reducers(resolution: int, lod: int, domains: int = 1):
     lodname = f"lod{lod}"
+    # multi-domain histograms need fixed bounds: per-partition auto
+    # bounds produce incompatible bin edges that cannot sum at read
+    hist = LevelHistogramReducer(field="density", bins=32, lo=0.0, hi=8.0) \
+        if domains > 1 else LevelHistogramReducer(field="density", bins=32)
     return [
         LODCutReducer(max_level=lod),
         SliceReducer(field="density", axis=2, position=0.5,
@@ -27,7 +31,7 @@ def default_reducers(resolution: int, lod: int):
         SliceReducer(field="density", axis=2, position=0.5,
                      resolution=resolution, source=lodname),
         ProjectionReducer(field="density", axis=2, resolution=resolution),
-        LevelHistogramReducer(field="density", bins=32),
+        hist,
     ]
 
 
@@ -44,19 +48,25 @@ def main(argv=None):
                    choices=["block", "drop-oldest", "subsample"])
     p.add_argument("--workers", type=int, default=1)
     p.add_argument("--queue-capacity", type=int, default=4)
+    p.add_argument("--domains", type=int, default=1,
+                   help="contributor groups: each step is partitioned, "
+                        "each group writes its own Hercule domain, and "
+                        "catalog queries merge them back at read")
     p.add_argument("--queries", type=int, default=16,
                    help="viewer queries to replay against the catalog")
     args = p.parse_args(argv)
 
     shutil.rmtree(args.out, ignore_errors=True)
-    reducers = default_reducers(args.resolution, args.lod)
+    reducers = default_reducers(args.resolution, args.lod, args.domains)
     engine = InTransitEngine(
         args.out, reducers,
         output_every=args.output_every, workers=args.workers,
-        queue_capacity=args.queue_capacity, policy=args.policy).start()
+        queue_capacity=args.queue_capacity, policy=args.policy,
+        domains=args.domains).start()
 
     print(f"== compute flow: {args.steps} Sedov steps "
-          f"(policy={args.policy}, output_every={args.output_every})")
+          f"(policy={args.policy}, output_every={args.output_every}, "
+          f"domains={args.domains})")
     t_compute = t_submit = 0.0
     for s in range(1, args.steps + 1):
         t0 = time.perf_counter()
@@ -74,15 +84,16 @@ def main(argv=None):
               f"staged={'yes' if staged else 'no '} "
               f"(gen {1e3*(t1-t0):6.1f} ms, submit {1e6*(t2-t1):6.1f} us)")
     engine.drain()
-    stats = engine.staging.stats
     print(f"   compute {t_compute:.2f} s, total submit {t_submit*1e3:.2f} ms "
           f"({100*t_submit/max(t_compute,1e-9):.2f} % overhead)")
-    print(f"   staging: accepted={stats.accepted} evicted={stats.evicted} "
-          f"dropped={stats.dropped} reuses={stats.buffer_reuses} "
-          f"allocs={stats.buffer_allocs}")
+    for g, area in enumerate(engine.stages):
+        stats = area.stats
+        print(f"   staging[g{g}]: accepted={stats.accepted} "
+              f"evicted={stats.evicted} dropped={stats.dropped} "
+              f"reuses={stats.buffer_reuses} allocs={stats.buffer_allocs}")
     engine.close()
 
-    print("== analysis flow: catalog replay")
+    print("== analysis flow: catalog replay (domain-merged queries)")
     cat = Catalog(args.out)
     steps = cat.steps()
     print(f"   contexts: {steps}")
@@ -90,6 +101,10 @@ def main(argv=None):
         return 1
     names = cat.reducers(steps[-1])
     print(f"   reducers: {names}")
+    if args.domains > 1:
+        att = cat.attrs(steps[-1])["insitu"]
+        print(f"   latest context domains={att['domains']} "
+              f"merge={att['merge']}")
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     for _ in range(args.queries):
@@ -111,6 +126,19 @@ def main(argv=None):
         size_img += ref.record.nbytes
     print(f"   selector sweep reduced/*/image: {n_img} records, "
           f"{size_img/1e3:.1f} kB on disk")
+    if args.domains > 1:
+        # merge-at-read spot check: the merged histogram must carry
+        # exactly the per-domain partial counts, summed
+        hname = next(n for n in names if n.startswith("hist-"))
+        merged = cat.query(steps[-1], hname)["hist"]
+        parts = [cat.query(steps[-1], hname, domain=d)["hist"]
+                 for d in cat.domains(steps[-1], hname)]
+        total = sum(int(p.sum()) for p in parts)
+        ok = int(merged.sum()) == total
+        print(f"   merge check {hname}: {len(parts)} domains, "
+              f"counts {int(merged.sum())} == sum(parts) {total}: {ok}")
+        if not ok:
+            return 1
     full_slice = next(r for r in reducers
                       if isinstance(r, SliceReducer) and r.source is None)
     img = cat.query(steps[-1], full_slice.name)["image"]

@@ -36,6 +36,9 @@ def main(argv=None):
     p.add_argument("--insitu-every", type=int, default=0)
     p.add_argument("--insitu-policy", default="drop-oldest",
                    choices=["block", "drop-oldest", "subsample"])
+    p.add_argument("--insitu-domains", type=int, default=1,
+                   help="in-transit contributor groups (reduced objects "
+                        "are written one domain per group, merged at read)")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
@@ -52,6 +55,7 @@ def main(argv=None):
         hdep_dir=args.hdep_dir, hdep_every=args.hdep_every,
         insitu_dir=args.insitu_dir, insitu_every=args.insitu_every,
         insitu_policy=args.insitu_policy,
+        insitu_domains=args.insitu_domains,
         seed=args.seed)
     trainer.run(args.steps)
     return 0

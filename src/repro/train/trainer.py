@@ -58,7 +58,8 @@ class Trainer:
                  seed: int = 0, log_every: int = 10,
                  hdep_dir: str | None = None, hdep_every: int = 0,
                  insitu_dir: str | None = None, insitu_every: int = 0,
-                 insitu_reducers=None, insitu_policy: str = "drop-oldest"):
+                 insitu_reducers=None, insitu_policy: str = "drop-oldest",
+                 insitu_domains: int = 1):
         self.lm = lm
         self.cfg = lm.cfg
         self.opt_cfg = opt_cfg or optim.OptConfig()
@@ -81,7 +82,7 @@ class Trainer:
                 [TensorNormReducer(), SpectraReducer(k=8)]
             self.insitu = InTransitEngine(
                 insitu_dir, reducers, output_every=insitu_every,
-                policy=insitu_policy, ncf=ncf)
+                policy=insitu_policy, ncf=ncf, domains=insitu_domains)
         self.monitor = StragglerMonitor()
         self.seed = seed
         self._stop = False

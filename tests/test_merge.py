@@ -1,0 +1,242 @@
+"""Multi-domain in-transit reduction and merge-at-read.
+
+Round-trips per merge strategy: contributor groups each reduce their
+partition and write their own Hercule domain; ``ContextView.read_merged``
+-based assembly must return exactly the single-domain reference. The
+single-domain degenerate case must match PR 1/2 behavior bit-for-bit.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.amr import AMRTree
+from repro.hercule import HerculeDB, api
+from repro.insitu import (Catalog, InTransitEngine, LevelHistogramReducer,
+                          LODCutReducer, ProjectionReducer, Reducer,
+                          SliceReducer, SpectraReducer, TensorNormReducer,
+                          partition_snapshot)
+from repro.sim import amrgen, fields
+
+
+@pytest.fixture(scope="module")
+def deep_tree():
+    """A Sedov tree whose deepest level is occupied (LOD cuts cut)."""
+    t = amrgen.generate_tree(fields.sedov(), min_level=3, max_level=6,
+                             threshold=1.15, level_factor=1.05)
+    t.validate()
+    assert t.level_offsets[-1] > t.level_offsets[-2]
+    return t
+
+
+def _amr_reducers():
+    return [LODCutReducer(max_level=4),
+            SliceReducer(field="density", resolution=64),
+            SliceReducer(field="density", resolution=32, source="lod4"),
+            ProjectionReducer(field="density", resolution=64),
+            LevelHistogramReducer(field="density", bins=16, lo=0.0, hi=5.0)]
+
+
+def _reduce_all(root, tree, groups, reducers=None, **engine_kw):
+    eng = InTransitEngine(str(root), reducers or _amr_reducers(),
+                          domains=groups, policy="block", **engine_kw)
+    eng.start()
+    assert eng.submit(0, tree)
+    eng.close()
+    return Catalog(str(root))
+
+
+# -------------------------------------------------------------- partition
+
+def test_partition_covers_every_leaf_exactly_once(deep_tree):
+    parts = [AMRTree.from_arrays(a) for a in
+             partition_snapshot(deep_tree.to_arrays(), "amr", 3)]
+    for p in parts:
+        p.validate()
+    owned = sum(int(((~p.refine) & p.owner).sum()) for p in parts)
+    assert owned == deep_tree.n_leaves
+    # owned leaves across groups are disjoint as (level, coords) cells
+    seen = set()
+    for p in parts:
+        lv = p.levels()
+        for i in np.flatnonzero((~p.refine) & p.owner):
+            key = (int(lv[i]), *map(int, p.coords[i]))
+            assert key not in seen
+            seen.add(key)
+
+
+def test_partition_tensors_stripes_names():
+    arrays = {f"t{i}": np.full(3, i) for i in range(7)}
+    parts = partition_snapshot(arrays, "tensors", 3)
+    names = [sorted(p) for p in parts]
+    assert sorted(n for ns in names for n in ns) == sorted(arrays)
+    assert all(len(p) >= 2 for p in parts)
+
+
+def test_partition_rejects_unpartitionable():
+    with pytest.raises(ValueError, match="AMR tree"):
+        partition_snapshot({"a": np.zeros(4)}, "amr", 2)
+    with pytest.raises(ValueError, match="kind"):
+        partition_snapshot({"a": np.zeros(4)}, "weird", 2)
+    # one group is the identity for any kind: no partition, no copies
+    arrays = {"a": np.zeros(4)}
+    assert partition_snapshot(arrays, "weird", 1)[0]["a"] is arrays["a"]
+
+
+# ------------------------------------------- merge-at-read per strategy
+
+@pytest.fixture(scope="module")
+def merged_catalogs(deep_tree, tmp_path_factory):
+    base = tmp_path_factory.mktemp("md")
+    return {g: _reduce_all(base / f"g{g}", deep_tree, g) for g in (1, 2, 4)}
+
+
+@pytest.mark.parametrize("groups", [2, 4])
+def test_slice_tile_merge_exact(merged_catalogs, groups):
+    ref = merged_catalogs[1]
+    cat = merged_catalogs[groups]
+    for r in (n for n in ref.reducers(0) if n.startswith("slice-")):
+        a, b = ref.query(0, r)["image"], cat.query(0, r)["image"]
+        np.testing.assert_array_equal(a, b)
+    assert len(cat.domains(0, "lod4")) == groups
+
+
+@pytest.mark.parametrize("groups", [2, 4])
+def test_hist_sum_merge_exact(merged_catalogs, groups):
+    ref = merged_catalogs[1]
+    cat = merged_catalogs[groups]
+    name = next(n for n in ref.reducers(0) if n.startswith("hist-"))
+    a, b = ref.query(0, name), cat.query(0, name)
+    np.testing.assert_array_equal(a["hist"], b["hist"])
+    np.testing.assert_array_equal(a["edges"], b["edges"])
+
+
+@pytest.mark.parametrize("groups", [2, 4])
+def test_projection_sum_merge(merged_catalogs, groups):
+    ref = merged_catalogs[1]
+    cat = merged_catalogs[groups]
+    name = next(n for n in ref.reducers(0) if n.startswith("proj-"))
+    np.testing.assert_allclose(cat.query(0, name)["image"],
+                               ref.query(0, name)["image"], rtol=1e-12)
+
+
+@pytest.mark.parametrize("groups", [2, 4])
+def test_lod_assemble_merge_exact(merged_catalogs, groups):
+    ref = merged_catalogs[1].query(0, "lod4")
+    got = merged_catalogs[groups].query(0, "lod4")
+    assert sorted(ref) == sorted(got)
+    for k in ref:
+        np.testing.assert_array_equal(ref[k], got[k])
+    AMRTree.from_arrays(got).validate()
+
+
+def test_hist_mismatched_edges_cannot_merge(tmp_path):
+    """Per-partition auto bounds produce incompatible edges: merge must
+    refuse rather than sum counts binned over different ranges."""
+    db = HerculeDB.create(str(tmp_path / "db"), kind="hdep", ncf=2)
+    ctx = db.begin_context(0)
+    for d, hi in ((0, 1.0), (1, 2.0)):
+        api.write_object(ctx, "reduced", d,
+                         {"hist": np.ones((2, 4), np.int64),
+                          "edges": np.linspace(0.0, hi, 5)},
+                         reducer="hist-auto")
+    ctx.finalize()
+    with pytest.raises(ValueError, match="fixed lo/hi"):
+        api.read_object(db, 0, "reduced", None, reducer="hist-auto",
+                        strategy="hist")
+
+
+def test_tensor_concat_and_union_merge(tmp_path):
+    import jax.numpy as jnp
+    rng = np.random.default_rng(3)
+    state = {"params": {f"l{i}/w": jnp.asarray(
+        rng.standard_normal((12, 12)).astype(np.float32)) for i in range(5)}}
+    objs = {}
+    for g in (1, 2):
+        eng = InTransitEngine(str(tmp_path / f"t{g}"),
+                              [TensorNormReducer(), SpectraReducer(k=4)],
+                              domains=g, policy="block").start()
+        assert eng.submit_state(1, state)
+        eng.close()
+        cat = Catalog(str(tmp_path / f"t{g}"))
+        objs[g] = {r: cat.query(1, r) for r in cat.reducers(1)}
+    for r, ref in objs[1].items():
+        for k, v in ref.items():
+            assert objs[2][r][k].dtype == v.dtype
+            np.testing.assert_array_equal(objs[2][r][k], v)
+
+
+# -------------------------------------------------- degenerate + plumbing
+
+def test_single_domain_merged_read_bit_for_bit(deep_tree, tmp_path):
+    """G=1 engine output is PR 1/2-shaped; merged read is the identity."""
+    cat = _reduce_all(tmp_path / "db", deep_tree, 1)
+    view = cat.db.view(0)
+    assert view.domains() == [0]                  # single-writer layout
+    for r in cat.reducers(0):
+        merged = api.read_object(cat.db, 0, "reduced", None, reducer=r)
+        direct = api.read_object(cat.db, 0, "reduced", 0, reducer=r)
+        assert sorted(merged) == sorted(direct)
+        for k in merged:
+            assert merged[k].dtype == direct[k].dtype
+            np.testing.assert_array_equal(merged[k], direct[k])
+
+
+def test_merge_strategy_resolution_errors(tmp_path):
+    db = HerculeDB.create(str(tmp_path / "db"), kind="hdep", ncf=2)
+    ctx = db.begin_context(5)
+    for d in (0, 1):
+        api.write_object(ctx, "reduced", d, {"x": np.full(4, d)},
+                         reducer="anon")
+    ctx.finalize()        # no insitu attrs: strategy is unresolvable
+    with pytest.raises(ValueError, match="no merge strategy"):
+        api.read_object(db, 5, "reduced", None, reducer="anon")
+    with pytest.raises(ValueError, match="unknown merge strategy"):
+        api.read_object(db, 5, "reduced", None, reducer="anon",
+                        strategy="nope")
+    out = api.read_object(db, 5, "reduced", None, reducer="anon",
+                          strategy="sum")
+    np.testing.assert_array_equal(out["x"], np.full(4, 1))
+    # domain restriction: a single selected domain needs no strategy
+    out = api.read_object(db, 5, "reduced", None, reducer="anon",
+                          domains=[1])
+    np.testing.assert_array_equal(out["x"], np.full(4, 1))
+
+
+def test_engine_attrs_record_merge_map(deep_tree, tmp_path):
+    cat = _reduce_all(tmp_path / "db", deep_tree, 2)
+    att = cat.attrs(0)["insitu"]
+    assert att["n_domains"] == 2 and att["domains"] == [0, 1]
+    assert att["merge"]["lod4"] == "assemble"
+    assert att["merge"][next(n for n in att["reducers"]
+                             if n.startswith("slice-"))] == "tile"
+    assert len(att["staging"]) == 2               # per-group stats
+
+
+def test_multidomain_drop_oldest_partial_contexts(tmp_path):
+    """Evicted parts must not wedge the countdown; surviving domains
+    finalize and merged reads serve what landed."""
+    class Slow(Reducer):
+        name = "slow"
+        kinds = ("tensors",)
+        merge = "union"
+
+        def reduce(self, snap, upstream):
+            time.sleep(0.03)
+            return {f"x{snap.domain}": np.array([float(snap.step)])}
+
+    eng = InTransitEngine(str(tmp_path / "db"), [Slow()], domains=2,
+                          queue_capacity=1, policy="drop-oldest").start()
+    n = 12
+    for s in range(1, n + 1):
+        eng.submit(s, {"a": np.zeros(16), "b": np.ones(8)}, kind="tensors")
+    eng.close()
+    cat = Catalog(str(tmp_path / "db"))
+    steps = cat.steps()
+    assert steps and steps[-1] == n           # freshest step always lands
+    for s in steps:
+        doms = cat.attrs(s)["insitu"]["domains"]
+        obj = cat.query(s, "slow")
+        assert sorted(obj) == [f"x{d}" for d in doms]
+        for d in doms:
+            assert obj[f"x{d}"][0] == s
