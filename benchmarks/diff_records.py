@@ -1,0 +1,108 @@
+"""Diff two ``bench-record/v1`` trajectory files: warn on regressions.
+
+CI downloads the previous PR's ``BENCH_<PR>.json`` artifact and compares
+the new run record by record::
+
+    python -m benchmarks.diff_records prev/BENCH_PR3.json BENCH_PR4.json
+
+Policy (mirrors the ISSUE/CI contract): a named record whose value got
+worse by more than ``--warn-pct`` (default 20%) prints a ``REGRESSION``
+warning — it does *not* fail the job (container benchmarks are noisy;
+only the explicit floors in ``benchmarks/run.py`` fail a build). Exit
+code is non-zero only for unusable inputs, or with ``--strict`` when a
+warning fired (for local use).
+
+Record semantics: values are costs (µs per call & friends) — higher is
+worse — except ``unit`` values ending in ``x``/``ratio``/``speedup``,
+which are benefits — lower is worse. Records present on only one side
+are listed as added/removed, never warned.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+BENEFIT_UNITS = ("x", "ratio", "speedup")
+
+
+def load_records(path: str) -> dict[str, dict]:
+    with open(path) as f:
+        data = json.load(f)
+    if data.get("schema") != "bench-record/v1":
+        raise ValueError(f"{path}: not a bench-record/v1 file "
+                         f"(schema={data.get('schema')!r})")
+    out = {}
+    for rec in data.get("records", []):
+        out.setdefault(rec["name"], rec)   # first occurrence wins
+    return out
+
+
+def _is_benefit(rec: dict) -> bool:
+    unit = str(rec.get("unit") or "")
+    return any(unit.endswith(b) for b in BENEFIT_UNITS)
+
+
+def diff(old: dict[str, dict], new: dict[str, dict], warn_pct: float
+         ) -> tuple[list[str], list[str]]:
+    """Returns (report lines, regression warnings)."""
+    lines, warnings = [], []
+    for name in sorted(set(old) | set(new)):
+        o, n = old.get(name), new.get(name)
+        if o is None:
+            lines.append(f"  + {name}: {n['value']:.1f} {n.get('unit')}"
+                         f" (new record)")
+            continue
+        if n is None:
+            lines.append(f"  - {name}: removed (was {o['value']:.1f})")
+            continue
+        ov, nv = float(o["value"]), float(n["value"])
+        if ov == 0:
+            lines.append(f"    {name}: {ov:.1f} -> {nv:.1f} (zero baseline)")
+            continue
+        change = (nv - ov) / abs(ov) * 100.0
+        worse = change if not _is_benefit(n) else -change
+        tag = ""
+        if worse > warn_pct:
+            tag = f"  <-- REGRESSION (> {warn_pct:g}% worse)"
+            warnings.append(
+                f"{name}: {ov:.1f} -> {nv:.1f} {n.get('unit')} "
+                f"({change:+.1f}%)")
+        lines.append(f"    {name}: {ov:.1f} -> {nv:.1f} {n.get('unit')} "
+                     f"({change:+.1f}%){tag}")
+    return lines, warnings
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("old", help="previous BENCH_*.json (artifact)")
+    p.add_argument("new", help="this run's BENCH_*.json")
+    p.add_argument("--warn-pct", type=float, default=20.0,
+                   help="warn when a record got worse by more than this")
+    p.add_argument("--strict", action="store_true",
+                   help="exit 1 when any regression warning fired")
+    args = p.parse_args(argv)
+
+    try:
+        old, new = load_records(args.old), load_records(args.new)
+    except (OSError, ValueError, KeyError) as e:
+        print(f"diff_records: unusable input: {e}", file=sys.stderr)
+        return 2
+
+    lines, warnings = diff(old, new, args.warn_pct)
+    print(f"== bench trajectory: {args.old} -> {args.new} "
+          f"({len(old)} -> {len(new)} records)")
+    for line in lines:
+        print(line)
+    if warnings:
+        print(f"\n::warning::{len(warnings)} bench record(s) regressed "
+              f">{args.warn_pct:g}%:")
+        for w in warnings:
+            print(f"::warning::  {w}")
+    else:
+        print(f"\nno record regressed more than {args.warn_pct:g}%")
+    return 1 if (args.strict and warnings) else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

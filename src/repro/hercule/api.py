@@ -23,9 +23,9 @@ Name patterns: a ``names`` entry containing ``*`` or ``?`` is a glob
 record names contain ``[``/``]`` from pytree key paths, which must never
 be read as character classes.
 
-Legacy free functions (``hdep.read_domain_tree`` & co.) remain as thin
-deprecation shims over this module; see DESIGN.md §11 for the migration
-table and deprecation policy.
+The legacy ``hdep`` free functions (``read_domain_tree`` & co.) were
+deprecation shims over this module until their two-PR countdown ended;
+they are now removed — see DESIGN.md §11 for the migration table.
 """
 from __future__ import annotations
 

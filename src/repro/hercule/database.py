@@ -181,11 +181,14 @@ class _GroupFiles:
             self.offset += len(payload)
             return os.path.basename(self._path(self.findex)), off
 
-    def flush(self):
+    def flush(self, sync: bool = True):
+        """Flush buffered appends; ``sync=False`` stops at the page cache
+        (enough for another process to fsync the file by path)."""
         with self.lock:
             if self.fh is not None:
                 self.fh.flush()
-                os.fsync(self.fh.fileno())
+                if sync:
+                    os.fsync(self.fh.fileno())
 
     def close(self):
         with self.lock:
@@ -221,7 +224,14 @@ class HerculeDB:
         manifest = {"kind": kind, "ncf": ncf, "max_file_bytes": max_file_bytes,
                     "io_threads": io_threads, "format_version": 1}
         path = os.path.join(root, "db.json")
-        if not os.path.exists(path):
+        if os.path.exists(path):
+            # the database already exists: its on-disk manifest governs
+            # (the files were laid out under *that* ncf/rollover) — a
+            # handle built from the requested parameters would disagree
+            # with every other opener about group->file mapping
+            with open(path) as f:
+                manifest = json.load(f)
+        else:
             with open(path, "w") as f:
                 json.dump(manifest, f, indent=1)
         return HerculeDB(root, manifest)
@@ -310,18 +320,35 @@ class HerculeDB:
                     thread_name_prefix="hercule-read")
             return self._read_pool
 
-    def flush_domain(self, domain: int) -> None:
-        """fsync the group file holding ``domain``'s appended records.
+    def flush_domain(self, domain: int, sync: bool = True) -> None:
+        """Flush the group file holding ``domain``'s appended records.
 
         Lets each contributor flush its own group independently (and in
         parallel with other groups) instead of funneling every group's
         fsync through the single finalize call — the finalize flush then
-        finds those pages already clean.
+        finds those pages already clean. ``sync=False`` publishes the
+        bytes to the page cache only: a lane process hands durability to
+        whoever commits the manifest (see :meth:`fsync_files`).
         """
         with self._glock:
             gf = self._groups.get(self.group_of(domain))
         if gf is not None:
-            gf.flush()
+            gf.flush(sync)
+
+    def fsync_files(self, names) -> None:
+        """fsync data files by basename — bytes another process appended.
+
+        The multi-process lane runtime's finalize hook: each lane flushes
+        its appends to the page cache (``flush_domain(sync=False)``) and
+        the manifest committer makes exactly the referenced files durable
+        before the atomic manifest rename.
+        """
+        for name in sorted(set(names)):
+            fd = os.open(os.path.join(self.root, "data", name), os.O_RDONLY)
+            try:
+                os.fsync(fd)
+            finally:
+                os.close(fd)
 
     def read_payload(self, rec: Record) -> bytes:
         with open(os.path.join(self.root, "data", rec.file), "rb") as f:
@@ -413,6 +440,36 @@ class ContextWriter:
 
     def abort(self) -> None:
         self._pool.shutdown(wait=False, cancel_futures=True)
+
+
+class DomainWriter:
+    """Record-collecting writer for one contributor's part of a context.
+
+    The multi-process shape of :class:`ContextWriter`: a lane process
+    appends its payloads to its own group files and keeps the
+    :class:`Record` entries, but the context *manifest* is committed
+    elsewhere (the engine collects every lane's records and finalizes
+    once). Quacks like ``ContextWriter`` for the ObjectKind writers; no
+    thread pool, no context directory, no finalize.
+    """
+
+    def __init__(self, db: HerculeDB, step: int):
+        self.db = db
+        self.step = step
+        self.records: list[Record] = []
+
+    def write_bytes(self, domain: int, name: str, payload: bytes, *,
+                    dtype: str = "uint8", shape: tuple | None = None,
+                    codec: str = "raw", meta: dict | None = None) -> None:
+        gf = self.db._group_files(self.db.group_of(domain))
+        fname, off = gf.append(payload)
+        self.records.append(Record(
+            name=name, domain=domain, file=fname, offset=off,
+            nbytes=len(payload), dtype=dtype,
+            shape=tuple(shape if shape is not None else (len(payload),)),
+            codec=codec, meta=meta or {}))
+
+    write_array = ContextWriter.write_array
 
 
 # ---------------------------------------------------------------- codecs

@@ -1,102 +1,22 @@
-"""HDep post-processing flows — legacy free functions (deprecated).
+"""HDep post-processing flows — moved to :mod:`repro.hercule.api`.
 
-The HDep object flavors now live in :mod:`repro.hercule.api` as typed
+The HDep object flavors live in :mod:`repro.hercule.api` as typed
 ObjectKinds (``amr_tree``, ``analysis``, ``reduced``): each kind declares
 its record naming schema, write/read codecs and assembly logic, and every
 read routes through an indexed :class:`~repro.hercule.api.ContextView`.
 
-This module keeps the original free functions as thin deprecation shims
-so existing callers keep working (DESIGN.md §11 has the migration table
-and the deprecation policy). New code should call::
+The legacy free functions that used to live here
+(``write_domain_tree`` / ``read_domain_tree`` / ``domains_in`` /
+``write_analysis`` / ``read_analysis`` / ``write_reduced`` /
+``read_reduced`` / ``reducers_in``) went through the DESIGN.md §11
+deprecation countdown (shims since PR 2, removed in PR 4). Call the
+unified API instead::
 
     from repro.hercule import api
     api.write_object(ctx, "amr_tree", domain, tree)
     tree   = api.read_object(db, step, "amr_tree", domain)
     stats  = api.read_object(db, step, "analysis", domain)
     arrays = api.read_object(db, step, "reduced", domain, reducer=name)
+    api.AMR_TREE.domains_in(db.view(step))
+    api.REDUCED.reducers_in(db.view(step))
 """
-from __future__ import annotations
-
-import warnings
-
-import numpy as np
-
-from ..core.amr import AMRTree
-from . import api
-from .database import HerculeDB
-
-
-def _deprecated(old: str, new: str) -> None:
-    warnings.warn(
-        f"repro.hercule.hdep.{old} is deprecated; use {new} "
-        f"(see DESIGN.md §11)", DeprecationWarning, stacklevel=3)
-
-
-# --------------------------------------------------------------- AMR flow
-
-def write_domain_tree(ctx, domain: int, tree: AMRTree, *,
-                      compress_fields: bool = True, zbits: int = 4) -> None:
-    """Deprecated shim for ``api.write_object(ctx, "amr_tree", ...)``."""
-    _deprecated("write_domain_tree",
-                'api.write_object(ctx, "amr_tree", domain, tree)')
-    api.write_object(ctx, "amr_tree", domain, tree,
-                     compress_fields=compress_fields, zbits=zbits)
-
-
-def read_domain_tree(db: HerculeDB, step: int, domain: int) -> AMRTree:
-    """Deprecated shim for ``api.read_object(db, step, "amr_tree", ...)``."""
-    _deprecated("read_domain_tree",
-                'api.read_object(db, step, "amr_tree", domain)')
-    return api.read_object(db, step, "amr_tree", domain)
-
-
-def domains_in(db: HerculeDB, step: int) -> list[int]:
-    """Deprecated shim for ``api.AMR_TREE.domains_in(db.view(step))``."""
-    _deprecated("domains_in", "api.AMR_TREE.domains_in(db.view(step))")
-    return api.AMR_TREE.domains_in(db.view(step))
-
-
-# ----------------------------------------------------------- reduced flow
-
-def write_reduced(ctx, domain: int, reducer: str,
-                  arrays: dict[str, np.ndarray], *,
-                  compress: bool = False) -> None:
-    """Deprecated shim for ``api.write_object(ctx, "reduced", ...)``."""
-    _deprecated("write_reduced",
-                'api.write_object(ctx, "reduced", domain, arrays, '
-                'reducer=reducer)')
-    api.write_object(ctx, "reduced", domain, arrays, reducer=reducer,
-                     compress=compress)
-
-
-def read_reduced(db: HerculeDB, step: int, reducer: str,
-                 domain: int = 0) -> dict[str, np.ndarray]:
-    """Deprecated shim for ``api.read_object(db, step, "reduced", ...)``."""
-    _deprecated("read_reduced",
-                'api.read_object(db, step, "reduced", domain, '
-                'reducer=reducer)')
-    return api.read_object(db, step, "reduced", domain, reducer=reducer)
-
-
-def reducers_in(db: HerculeDB, step: int) -> list[str]:
-    """Deprecated shim for ``api.REDUCED.reducers_in(db.view(step))``."""
-    _deprecated("reducers_in", "api.REDUCED.reducers_in(db.view(step))")
-    return api.REDUCED.reducers_in(db.view(step))
-
-
-# ---------------------------------------------------------------- ML flow
-
-def write_analysis(ctx, domain: int, tensors: dict[str, np.ndarray], *,
-                   compress: bool = True) -> None:
-    """Deprecated shim for ``api.write_object(ctx, "analysis", ...)``."""
-    _deprecated("write_analysis",
-                'api.write_object(ctx, "analysis", domain, tensors)')
-    api.write_object(ctx, "analysis", domain, tensors, compress=compress)
-
-
-def read_analysis(db: HerculeDB, step: int, domain: int = 0
-                  ) -> dict[str, np.ndarray]:
-    """Deprecated shim for ``api.read_object(db, step, "analysis", ...)``."""
-    _deprecated("read_analysis",
-                'api.read_object(db, step, "analysis", domain)')
-    return api.read_object(db, step, "analysis", domain)

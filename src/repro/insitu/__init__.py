@@ -19,16 +19,24 @@ written at an independent cadence.
   * :mod:`reducers`  — composable reduction operators over AMR trees and
     train states, combined in a DAG; each declares its multi-domain
     merge strategy.
-  * :mod:`engine`    — per-group worker lanes consuming staged snapshots
-    and writing reduced HDep domains at the engine's own output
-    frequency.
+  * :mod:`lanes`     — the pluggable lane runtime: ``thread`` lanes
+    (in-process workers) or ``process`` lanes (one OS process per
+    contributor group over shared-memory staging).
+  * :mod:`engine`    — per-group lanes consuming staged snapshots and
+    writing reduced HDep domains at the engine's own output frequency.
   * :mod:`catalog`   — the read side: cached, domain-merged queries for
     many concurrent viewers.
+  * :mod:`server`    — the catalog as a service: many viewer *processes*
+    share one reduction cache over HTTP (``RemoteCatalog`` client).
 """
 from .catalog import Catalog                                   # noqa: F401
 from .engine import InTransitEngine                            # noqa: F401
+from .lanes import (BACKENDS, LaneBackend,                     # noqa: F401
+                    register_backend)
 from .partition import partition_snapshot                      # noqa: F401
 from .reducers import (LevelHistogramReducer, LODCutReducer,   # noqa: F401
                        ProjectionReducer, Reducer, ReducerDAG,
                        SliceReducer, SpectraReducer, TensorNormReducer)
-from .staging import POLICIES, Snapshot, StagingArea           # noqa: F401
+from .server import CatalogServer, RemoteCatalog               # noqa: F401
+from .staging import (POLICIES, ShmStagingArea, Snapshot,      # noqa: F401
+                      StagingArea)

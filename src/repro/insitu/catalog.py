@@ -153,3 +153,8 @@ class Catalog:
     def clear_cache(self) -> None:
         with self._lock:
             self._cache.clear()
+
+    def close(self) -> None:
+        """Release the cache and the underlying database handles."""
+        self.clear_cache()
+        self.db.close()

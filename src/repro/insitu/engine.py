@@ -2,21 +2,34 @@
 
 ``InTransitEngine`` sits between the compute flow and an HDep database:
 compute calls :meth:`submit` (or :meth:`submit_state` for train states)
-and returns immediately; worker lanes drain the staging areas, run the
-reducer DAG and write each snapshot's reduced objects as one HDep
-context. The engine has its *own* output frequency (``output_every``),
-independent of HProt checkpoint cadence — the paper's "different output
-frequencies" between the protection and post-processing flows.
+and returns immediately; lanes drain the staging areas, run the reducer
+DAG and write each snapshot's reduced objects as one HDep context. The
+engine has its *own* output frequency (``output_every``), independent of
+HProt checkpoint cadence — the paper's "different output frequencies"
+between the protection and post-processing flows.
 
-With ``domains > 1`` the engine runs the paper's per-producer shape
-inside one process: each submitted step is partitioned over contributor
-groups (``insitu.partition``), every group owns its own
-:class:`StagingArea` and worker lane, and each group writes its part of
-the reduction as its *own Hercule domain* within the shared per-step
-context — no single-writer funnel. The context finalizes when the last
-group's part lands (or is dropped by backpressure); reads merge the
-domains back (``hercule.api.ReducedKind``), so a context with some parts
-dropped still serves its surviving domains.
+With ``domains > 1`` the engine runs the paper's per-producer shape:
+each submitted step is partitioned over contributor groups
+(``insitu.partition``), every group owns its own staging area and lane,
+and each group writes its part of the reduction as its *own Hercule
+domain* within the shared per-step context — no single-writer funnel.
+The context finalizes when the last group's part lands (or is dropped by
+backpressure); reads merge the domains back
+(``hercule.api.ReducedKind``), so a context with some parts dropped
+still serves its surviving domains.
+
+*How* lanes execute is pluggable (``insitu.lanes``): ``backend="thread"``
+keeps every lane an in-process worker thread (PR-3 semantics, bit for
+bit); ``backend="process"`` makes each group's lane an OS process fed
+through shared-memory staging, so reduction and domain writes run
+outside the producer's GIL — the live pipeline scales the way
+``bench_insitu.run_multidomain`` demonstrates with separate processes.
+
+``step_ttl`` bounds the life of a partial step: when per-producer
+submission (:meth:`submit_part`) loses a producer (crash, skipped
+cadence), the step's context finalizes with the surviving domains after
+``step_ttl`` seconds of inactivity — the same path drop-oldest eviction
+takes — instead of leaking the pending context forever.
 
 Contexts written here carry ``attrs["insitu"]`` with the reducer names,
 the per-reducer merge strategies, the contributing domains and staging
@@ -27,13 +40,15 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 
 from ..core.amr import AMRTree
 from ..hercule import api
 from ..hercule.database import HerculeDB
+from .lanes import make_backend
 from .partition import partition_snapshot
 from .reducers import Reducer, ReducerDAG
-from .staging import Snapshot, StagingArea
+from .staging import Snapshot
 
 
 @dataclasses.dataclass
@@ -46,41 +61,38 @@ class _PendingStep:
     wrote: set = dataclasses.field(default_factory=set)      # domains
     reducers: set = dataclasses.field(default_factory=set)
     finalizing: bool = False          # countdown done, manifest pending
+    touched: float = 0.0              # monotonic time of last activity
+    writers: int = 0                  # lanes mid-write into ctx (TTL gate)
 
 
 class InTransitEngine:
-    """Worker lanes turning staged snapshots into reduced HDep objects."""
+    """Contributor-group lanes turning staged snapshots into reduced HDep."""
 
     def __init__(self, root: str | HerculeDB, reducers: list[Reducer], *,
                  output_every: int = 1, workers: int = 1,
                  queue_capacity: int = 4, policy: str = "drop-oldest",
                  ncf: int = 4, compress: bool = False, domains: int = 1,
-                 durable_parts: bool = False):
+                 durable_parts: bool = False, backend: str = "thread",
+                 step_ttl: float | None = None):
+        from .lanes import BACKENDS
+        if backend not in BACKENDS:   # before creating anything on disk
+            raise ValueError(f"unknown lane backend {backend!r}; "
+                             f"registered: {sorted(BACKENDS)}")
+        self.n_domains = max(1, domains)
+        if backend == "process" and self.n_domains > 1:
+            ncf = 1   # each lane process must own its group files
         self.db = root if isinstance(root, HerculeDB) else \
             HerculeDB.create(root, kind="hdep", ncf=ncf)
         self.dag = ReducerDAG(reducers)
         self.compress = compress
         self.output_every = max(1, output_every)
-        self.n_domains = max(1, domains)
         #: fsync each group file from its own lane right after the part
         #: lands (parallel durability on storage with scalable sync);
         #: off = PR-1 semantics, durability at context finalize only
         self.durable_parts = durable_parts
+        self.step_ttl = step_ttl
         self._merge_map = {r.name: r.merge for r in self.dag
                            if getattr(r, "merge", None)}
-        #: one staging area per contributor group; ``staging`` aliases
-        #: group 0 for the single-group API the compute side always had
-        self.stages = [
-            StagingArea(capacity=queue_capacity, policy=policy,
-                        n_buffers=queue_capacity + max(1, workers) + 1,
-                        on_evict=self._on_evict)
-            for _ in range(self.n_domains)]
-        self.staging = self.stages[0]
-        self._threads = [
-            threading.Thread(target=self._worker, args=(area,),
-                             name=f"insitu-g{g}-{i}", daemon=True)
-            for g, area in enumerate(self.stages)
-            for i in range(max(1, workers))]
         self._errors: list[BaseException] = []
         self._pending: dict[int, _PendingStep] = {}
         #: completed steps whose finalize was deferred off the compute
@@ -88,17 +100,31 @@ class InTransitEngine:
         #: the manifest fsync must not run there)
         self._deferred: list[tuple[int, _PendingStep]] = []
         self._written: list[int] = []
+        self._committed: set[int] = set()   # fast membership for _written
         self._failed = 0
         self._skipped = 0          # snapshot parts no reducer applied to
+        self._ttl_expired = 0      # steps force-finalized by step_ttl
         self._wlock = threading.Lock()
         self._started = False
+        #: the lane runtime: staging transport + execution context per
+        #: contributor group (see insitu.lanes)
+        self._backend = make_backend(backend, self, workers=workers,
+                                     queue_capacity=queue_capacity,
+                                     policy=policy)
+        #: one staging area per contributor group; ``staging`` aliases
+        #: group 0 for the single-group API the compute side always had
+        self.stages = self._backend.stages
+        self.staging = self.stages[0]
+
+    @property
+    def backend(self) -> str:
+        return self._backend.name
 
     # ----------------------------------------------------------- compute side
     def start(self) -> "InTransitEngine":
         if not self._started:
             self._started = True
-            for t in self._threads:
-                t.start()
+            self._backend.start()
         return self
 
     def submit(self, step: int, payload, *, kind: str = "amr",
@@ -116,6 +142,7 @@ class InTransitEngine:
             self.start()
         if step % self.output_every != 0:
             return False
+        self._sweep_ttl()
         if isinstance(payload, AMRTree):
             payload = payload.to_arrays()
             kind = "amr"
@@ -142,6 +169,7 @@ class InTransitEngine:
             raise ValueError(
                 f"got {len(parts)} parts for {self.n_domains} contributor "
                 f"group(s)")
+        self._sweep_ttl()
         parts = [p.to_arrays() if isinstance(p, AMRTree) else p
                  for p in parts]
         return self._stage_parts(step, parts, kind, meta)
@@ -154,9 +182,13 @@ class InTransitEngine:
         (e.g. one thread per simulated MPI rank) stages its own part
         into its own group's staging area, concurrently with the others
         — no shared hand-off thread. The step's context finalizes once
-        all ``domains`` parts have settled, so *every* producer must
-        call this for every on-cadence step (backpressure drops count
-        as settled; a producer that skips a step leaks the context).
+        all ``domains`` parts have settled; backpressure drops count as
+        settled, and a producer that skips an on-cadence step is covered
+        by ``step_ttl`` (the partial context finalizes with the
+        surviving domains after the timeout; without a TTL it would
+        wait forever). A part arriving *after* its step's context
+        committed is rejected (returns False) — a lone straggler must
+        not restart the countdown and overwrite the survivors' manifest.
         """
         self.check_errors()
         if not self._started:
@@ -166,14 +198,24 @@ class InTransitEngine:
         if not 0 <= domain < self.n_domains:
             raise ValueError(f"domain {domain} outside the engine's "
                              f"{self.n_domains} contributor group(s)")
+        self._sweep_ttl()
         if isinstance(payload, AMRTree):
             payload = payload.to_arrays()
         with self._wlock:
             pend = self._pending.get(step)
-            if pend is None or pend.finalizing:
-                # absent, or a previous submission's context is already
-                # mid-finalize: this part belongs to a fresh countdown
-                self._pending[step] = _PendingStep(remaining=self.n_domains)
+            if (pend is not None and pend.finalizing) or \
+                    (pend is None and step in self._committed):
+                # the step's context already committed (or is committing)
+                # — e.g. a TTL-finalized partial. A lone late part must
+                # not start a fresh countdown: it could only ever hold
+                # its own domain, and committing that would *overwrite*
+                # the manifest that carries the other survivors.
+                return False
+            if pend is None:
+                self._pending[step] = _PendingStep(
+                    remaining=self.n_domains, touched=time.monotonic())
+            else:
+                pend.touched = time.monotonic()
         ok = self.stages[domain].push(step, payload, kind=kind, meta=meta,
                                       domain=domain,
                                       n_domains=self.n_domains)
@@ -192,9 +234,11 @@ class InTransitEngine:
                 # resubmission gets its own entry (and so its own
                 # ContextWriter — never append to a mid-serialization
                 # manifest); the stale entry pops itself by identity
-                self._pending[step] = _PendingStep(remaining=len(parts))
+                self._pending[step] = _PendingStep(
+                    remaining=len(parts), touched=time.monotonic())
             else:                      # resubmitted step: extend the countdown
                 pend.remaining += len(parts)
+                pend.touched = time.monotonic()
         staged_any = False
         for g, part in enumerate(parts):
             ok = self.stages[g].push(step, part, kind=kind, meta=meta,
@@ -228,30 +272,12 @@ class InTransitEngine:
         """A queued part was displaced by drop-oldest backpressure.
 
         Runs on the pushing (compute) thread, so a completed countdown
-        is deferred — worker lanes and :meth:`drain` commit it.
+        is deferred — lanes (or :meth:`drain`) commit it.
         """
         self._part_done(snap.step, None, None, defer_finalize=True)
 
-    def _worker(self, area: StagingArea):
-        while True:
-            snap = area.pop(timeout=0.25)
-            if snap is None:
-                self._run_deferred()
-                if area.closed and len(area) == 0:
-                    return
-                continue
-            try:
-                self._reduce_and_write(snap)
-            except BaseException as e:   # surfaced on next submit/drain
-                self._errors.append(e)
-                with self._wlock:
-                    self._failed += 1
-                self._part_done(snap.step, None, None)
-            finally:
-                area.release(snap)
-            self._run_deferred()
-
     def _reduce_and_write(self, snap: Snapshot):
+        """Thread-backend execution of one part (in the engine process)."""
         outputs = self.dag.run(snap)
         if not outputs:
             # no reducer accepted this snapshot kind — don't litter the
@@ -262,25 +288,66 @@ class InTransitEngine:
             return
         with self._wlock:
             pend = self._pending.get(snap.step)
-            if pend is not None and pend.ctx is None:
-                pend.ctx = self.db.begin_context(snap.step)
-                pend.kind = snap.kind
-                pend.meta = snap.meta
-            ctx = pend.ctx if pend is not None else None
-        if ctx is None:   # lone part of an already-settled step (shouldn't
-            return        # happen; guards against double accounting)
-        for rname, arrays in outputs.items():
-            api.write_object(ctx, "reduced", snap.domain, arrays,
-                             reducer=rname, compress=self.compress)
-        if self.durable_parts:
-            # each lane makes its own group durable: group fsyncs overlap
-            # across lanes instead of queueing serially behind finalize
-            self.db.flush_domain(snap.domain)
-        self._part_done(snap.step, snap.domain, set(outputs))
+            ctx = None
+            if pend is not None and not pend.finalizing:
+                if pend.ctx is None:
+                    pend.ctx = self.db.begin_context(snap.step)
+                    pend.kind = snap.kind
+                    pend.meta = snap.meta
+                ctx = pend.ctx
+                # holding a writer claim keeps the TTL sweep from
+                # finalizing (and serializing) this manifest while the
+                # records below are still being appended
+                pend.writers += 1
+        if ctx is None:   # lone part of a settled (or TTL-expired) step:
+            return        # never write into a mid-serialization manifest
+        try:
+            for rname, arrays in outputs.items():
+                api.write_object(ctx, "reduced", snap.domain, arrays,
+                                 reducer=rname, compress=self.compress)
+            if self.durable_parts:
+                # each lane makes its own group durable: group fsyncs
+                # overlap across lanes instead of queueing serially
+                # behind finalize
+                self.db.flush_domain(snap.domain)
+        except BaseException:
+            with self._wlock:
+                pend.writers -= 1
+            raise          # the lane settles the part via its error path
+        # release the writer claim atomically with the settle, so the
+        # countdown can never finalize between the two
+        self._part_done(snap.step, snap.domain, set(outputs),
+                        release_writer=True)
+
+    def _part_records(self, step: int, domain: int, records, reducers: set,
+                      kind: str, meta: dict | None) -> None:
+        """Process-backend intake: a lane landed its part, records arrive.
+
+        The lane already appended the payload bytes to its own group
+        files; the engine only collects the record index into the shared
+        per-step context for the manifest commit.
+        """
+        with self._wlock:
+            pend = self._pending.get(step)
+            live = pend is not None and not pend.finalizing
+            if live:
+                if pend.ctx is None:
+                    pend.ctx = self.db.begin_context(step)
+                    pend.kind = kind
+                    pend.meta = dict(meta or {})
+                pend.ctx.records.extend(records)
+                # claim a writer until the settle below: a TTL sweep
+                # between the two lock holds must not commit a manifest
+                # carrying these records but not their domain/reducers
+                pend.writers += 1
+        if not live:      # late part of a TTL-expired step: its bytes
+            return        # stay orphaned (no manifest references them)
+        self._part_done(step, domain, reducers, release_writer=True)
 
     def _part_done(self, step: int, domain: int | None,
                    reducers: set | None, *,
-                   defer_finalize: bool = False) -> None:
+                   defer_finalize: bool = False,
+                   release_writer: bool = False) -> None:
         """One contributor part settled (written, dropped, or failed).
 
         The pending entry survives until the manifest is committed, so
@@ -290,11 +357,20 @@ class InTransitEngine:
             pend = self._pending.get(step)
             if pend is None or pend.finalizing:
                 return
+            if release_writer:
+                pend.writers -= 1
             pend.remaining -= 1
+            pend.touched = time.monotonic()
             if domain is not None:
                 pend.wrote.add(domain)
                 pend.reducers |= reducers
             if pend.remaining > 0:
+                return
+            if pend.writers > 0:
+                # a lane is still appending records into this context
+                # (possible when a TTL sweep consumed the countdown):
+                # that writer's own settle re-enters here with
+                # writers == 0 and commits — its records included
                 return
             pend.finalizing = True
             if pend.ctx is None:        # every part dropped/skipped: no
@@ -305,11 +381,39 @@ class InTransitEngine:
                 return
         self._finalize_step(step, pend)
 
+    def _sweep_ttl(self) -> None:
+        """Force-settle steps inactive past ``step_ttl`` (partial commit).
+
+        A producer that skipped an on-cadence step (or died) leaves the
+        step's countdown short forever; after ``step_ttl`` seconds with
+        no part activity the missing parts are settled through the same
+        path as drop-oldest eviction, so the context commits with the
+        surviving domains only. A step with a lane mid-write into its
+        context (``writers > 0``) is never swept — the TTL targets
+        missing producers, not slow reductions; a part the sweep beat
+        to the *start* of its write finds the context finalizing and
+        skips cleanly.
+        """
+        if self.step_ttl is None:
+            return
+        now = time.monotonic()
+        with self._wlock:
+            expired = [(step, pend.remaining)
+                       for step, pend in self._pending.items()
+                       if not pend.finalizing and pend.remaining > 0
+                       and pend.writers == 0
+                       and now - pend.touched > self.step_ttl]
+            self._ttl_expired += len(expired)
+        for step, missing in expired:
+            for _ in range(missing):
+                self._part_done(step, None, None, defer_finalize=True)
+
     def _finalize_step(self, step: int, pend: _PendingStep) -> None:
         """Commit one completed context; errors surface via check_errors."""
         staging = self.stages[0].stats.as_dict() if self.n_domains == 1 \
             else [a.stats.as_dict() for a in self.stages]
         try:
+            self._backend.pre_finalize(pend)
             pend.ctx.finalize(attrs={"insitu": {
                 "kind": pend.kind,
                 "reducers": sorted(pend.reducers),
@@ -330,6 +434,7 @@ class InTransitEngine:
             return
         with self._wlock:
             self._written.append(step)
+            self._committed.add(step)
             if self._pending.get(step) is pend:
                 del self._pending[step]
 
@@ -354,6 +459,12 @@ class InTransitEngine:
         with self._wlock:
             return self._skipped
 
+    @property
+    def ttl_expired_steps(self) -> int:
+        """Steps force-finalized (partial) by the step TTL."""
+        with self._wlock:
+            return self._ttl_expired
+
     def check_errors(self) -> None:
         if self._errors:
             raise RuntimeError("in-transit reduction failed") \
@@ -361,11 +472,11 @@ class InTransitEngine:
 
     def drain(self, timeout: float = 60.0) -> None:
         """Block until every accepted part was reduced (or dropped)."""
-        import time
         deadline = time.perf_counter() + timeout
         while True:
             self.check_errors()
             self._run_deferred()
+            self._sweep_ttl()
             with self._wlock:
                 if not self._pending:
                     return
@@ -380,16 +491,10 @@ class InTransitEngine:
                 self.drain()
             except BaseException as e:
                 err = e
-        for area in self.stages:
-            area.close()
         if self._started:
-            for t in self._threads:
-                t.join(timeout=30.0)
-            if any(t.is_alive() for t in self._threads):
-                # never close the db under a still-writing worker — a
-                # leaked daemon thread beats a corrupted context
-                raise TimeoutError(
-                    "in-transit workers did not stop; database left open")
+            self._backend.stop(timeout=30.0)
+        else:
+            self._backend.stop(timeout=0.0)
         self._run_deferred()   # evict-completed contexts with no lane left
         self.db.close()
         if err is not None:

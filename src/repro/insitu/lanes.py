@@ -1,0 +1,342 @@
+"""Pluggable lane runtime: how contributor-group lanes actually execute.
+
+The engine (``insitu/engine.py``) owns the *what*: cadence, partitioning,
+the per-step part countdown and manifest finalize. A :class:`LaneBackend`
+owns the *how*: the staging transport and the execution context in which
+each group's lane drains its staging area, runs the reducer DAG and
+lands its Hercule domain.
+
+Two backends register here:
+
+  * ``thread``  — PR-3 semantics, bit for bit: one ``StagingArea`` and
+    ``workers`` daemon threads per group, reducing and writing in the
+    engine's process through the shared ``ContextWriter``.
+  * ``process`` — the paper's per-producer shape with real OS processes:
+    each group's lane is a spawned process fed through a
+    :class:`~repro.insitu.staging.ShmStagingArea` (shared-memory slabs,
+    pickle-free descriptor headers), so reduction *and* the Hercule
+    domain writes run fully outside the producer's GIL. Lanes append to
+    their own group files (``DomainWriter``) and report the record index
+    over a small results queue; the engine commits one manifest per
+    step and fsyncs exactly the referenced data files first.
+
+``register_backend`` makes the runtime pluggable — a future MPI or RPC
+lane transport slots in without touching the engine.
+"""
+from __future__ import annotations
+
+import multiprocessing
+import queue
+import threading
+import traceback
+
+from ..hercule import api
+from ..hercule.database import DomainWriter, HerculeDB, Record
+from .reducers import ReducerDAG
+from .staging import ShmStagingArea, StagingArea
+
+BACKENDS: dict[str, type] = {}
+
+
+def register_backend(name: str, cls: type) -> type:
+    """Register (or replace) a lane backend under ``name``."""
+    BACKENDS[name] = cls
+    return cls
+
+
+def make_backend(name: str, engine, **kw):
+    if name not in BACKENDS:
+        raise ValueError(f"unknown lane backend {name!r}; "
+                         f"registered: {sorted(BACKENDS)}")
+    return BACKENDS[name](engine, **kw)
+
+
+class LaneBackend:
+    """One lane-execution strategy; constructed by and bound to an engine.
+
+    Contract: expose ``stages`` (one push-capable area per contributor
+    group, wired to the engine's ``on_evict``), run each accepted part
+    through the reducer DAG exactly once, settle it via the engine's
+    ``_part_done``/record paths, and surface failures on
+    ``engine._errors``. ``stop()`` must not return while a lane could
+    still be writing.
+    """
+
+    name = ""
+
+    def __init__(self, engine):
+        self.engine = engine
+        self.stages: list = []
+
+    def start(self) -> None:
+        raise NotImplementedError
+
+    def stop(self, timeout: float = 30.0) -> None:
+        """Close staging, stop lanes, reclaim transport resources."""
+        raise NotImplementedError
+
+    def pre_finalize(self, pend) -> None:
+        """Durability hook before a context manifest commits."""
+
+
+class ThreadLaneBackend(LaneBackend):
+    """In-process worker threads (the original engine execution model)."""
+
+    name = "thread"
+
+    def __init__(self, engine, *, workers: int, queue_capacity: int,
+                 policy: str):
+        super().__init__(engine)
+        self.stages = [
+            StagingArea(capacity=queue_capacity, policy=policy,
+                        n_buffers=queue_capacity + max(1, workers) + 1,
+                        on_evict=engine._on_evict)
+            for _ in range(engine.n_domains)]
+        self._threads = [
+            threading.Thread(target=self._worker, args=(area,),
+                             name=f"insitu-g{g}-{i}", daemon=True)
+            for g, area in enumerate(self.stages)
+            for i in range(max(1, workers))]
+
+    def start(self) -> None:
+        for t in self._threads:
+            t.start()
+
+    def _worker(self, area: StagingArea):
+        eng = self.engine
+        while True:
+            snap = area.pop(timeout=0.25)
+            if snap is None:
+                eng._run_deferred()
+                eng._sweep_ttl()
+                if area.closed and len(area) == 0:
+                    return
+                continue
+            try:
+                eng._reduce_and_write(snap)
+            except BaseException as e:   # surfaced on next submit/drain
+                eng._errors.append(e)
+                with eng._wlock:
+                    eng._failed += 1
+                eng._part_done(snap.step, None, None)
+            finally:
+                area.release(snap)
+            eng._run_deferred()
+
+    def stop(self, timeout: float = 30.0) -> None:
+        for area in self.stages:
+            area.close()
+        for t in self._threads:
+            if t.ident is not None:      # skip never-started lanes
+                t.join(timeout=timeout)
+        if any(t.is_alive() for t in self._threads):
+            # never close the db under a still-writing worker — a
+            # leaked daemon thread beats a corrupted context
+            raise TimeoutError(
+                "in-transit workers did not stop; database left open")
+
+
+def _lane_main(handle, root: str, group: int, reducers, compress: bool,
+               durable_parts: bool, results) -> None:
+    """One process lane: attach shm staging, reduce, write own domain."""
+    area = ShmStagingArea.attach(handle)
+    dag = ReducerDAG(reducers)
+    db = HerculeDB.open(root)
+    try:
+        while True:
+            try:
+                snap = area.pop(timeout=0.25)
+            except BaseException:
+                # a transport failure is fatal for the lane: report it
+                # (a bare exit would look clean to the collector while
+                # this group's queued steps never settle)
+                results.put(("error", -1, group, None, None,
+                             traceback.format_exc(), None))
+                return
+            if snap is None:
+                if area.closed and len(area) == 0:
+                    return
+                continue
+            try:
+                outputs = dag.run(snap)
+                if not outputs:
+                    results.put(("skipped", snap.step, group, None, None,
+                                 None, None))
+                else:
+                    ctx = DomainWriter(db, snap.step)
+                    for rname, arrays in outputs.items():
+                        api.write_object(ctx, "reduced", group, arrays,
+                                         reducer=rname, compress=compress)
+                    # publish the appended bytes: page cache always (the
+                    # manifest committer fsyncs by path), disk if this
+                    # lane owns its own durability
+                    db.flush_domain(group, sync=durable_parts)
+                    results.put((
+                        "done", snap.step, group,
+                        [r.to_json() for r in ctx.records],
+                        sorted(outputs), snap.kind, snap.meta))
+            except BaseException:
+                results.put(("error", snap.step, group, None, None,
+                             traceback.format_exc(), None))
+            finally:
+                area.release(snap)
+    finally:
+        db.close()
+        area.detach()
+        results.put(("exit", None, group, None, None, None, None))
+
+
+class ProcessLaneBackend(LaneBackend):
+    """One spawned OS process per contributor group over shm staging.
+
+    The live-pipeline version of the paper's claim: every contributor
+    writes its own domain with no shared interpreter lock. Each lane
+    owns its group files exclusively, which requires one Hercule group
+    per domain — the engine creates its database with ``ncf=1`` for
+    this backend (and refuses a database where lanes would share a
+    group file).
+
+    Crash semantics: a lane dying mid-part leaves at most orphaned
+    bytes in its own group file — the step's manifest never references
+    them. The death is surfaced as an engine error on the next
+    ``check_errors``; steps whose parts were queued to the dead lane
+    finalize through the engine's step TTL (if enabled) with the
+    surviving domains.
+    """
+
+    name = "process"
+
+    def __init__(self, engine, *, workers: int, queue_capacity: int,
+                 policy: str):
+        super().__init__(engine)
+        db = engine.db
+        if engine.n_domains > 1 and db.ncf != 1:
+            raise ValueError(
+                f"backend='process' needs one Hercule group per domain so "
+                f"each lane owns its files; database has ncf={db.ncf} "
+                f"(create the engine with ncf=1)")
+        ctx = multiprocessing.get_context("spawn")
+        self._mp = ctx
+        self.stages = [
+            ShmStagingArea(capacity=queue_capacity, policy=policy,
+                           n_slots=queue_capacity + 2,
+                           on_evict=engine._on_evict, mp_context=ctx)
+            for _ in range(engine.n_domains)]
+        self._results = ctx.Queue()
+        reducers = list(engine.dag)
+        self._procs = [
+            ctx.Process(target=_lane_main,
+                        args=(area.handle(), db.root, g, reducers,
+                              engine.compress, engine.durable_parts,
+                              self._results),
+                        name=f"insitu-lane-g{g}", daemon=True)
+            for g, area in enumerate(self.stages)]
+        self._collector = threading.Thread(
+            target=self._collect, name="insitu-collector", daemon=True)
+        self._stopping = False
+        self._exited: set[int] = set()
+
+    def start(self) -> None:
+        for p in self._procs:
+            p.start()
+        self._collector.start()
+
+    # ------------------------------------------------------- result intake
+    def _collect(self) -> None:
+        eng = self.engine
+        while True:
+            try:
+                msg = self._results.get(timeout=0.25)
+            except queue.Empty:
+                eng._run_deferred()
+                eng._sweep_ttl()
+                if len(self._exited) == len(self._procs) or \
+                        (self._stopping and
+                         not any(p.is_alive() for p in self._procs)):
+                    return
+                if not self._stopping:
+                    self._check_lanes()
+                continue
+            tag, step, group = msg[0], msg[1], msg[2]
+            if tag == "exit":
+                self._exited.add(group)
+                if len(self._exited) == len(self._procs):
+                    eng._run_deferred()
+                    return
+            elif tag == "done":
+                _, _, _, recs, reducers, kind, meta = msg
+                eng._part_records(step, group,
+                                  [Record.from_json(r) for r in recs],
+                                  set(reducers), kind, meta)
+            elif tag == "skipped":
+                with eng._wlock:
+                    eng._skipped += 1
+                eng._part_done(step, None, None)
+            elif tag == "error":
+                eng._errors.append(RuntimeError(
+                    f"process lane g{group} failed at step {step}:\n"
+                    f"{msg[5]}"))
+                with eng._wlock:
+                    eng._failed += 1
+                if step < 0:
+                    # fatal transport failure: the lane is exiting; stop
+                    # producers from queueing (or blocking) behind it
+                    self.stages[group].close()
+                else:
+                    eng._part_done(step, None, None)
+            eng._run_deferred()
+
+    def _check_lanes(self) -> None:
+        """Surface lanes that died without reporting (crash semantics).
+
+        A clean exit announces itself on the results queue; only a
+        nonzero exit code is a crash (a zero-exit lane may simply have
+        its "exit" message still queued).
+        """
+        for g, p in enumerate(self._procs):
+            if g not in self._exited and p.exitcode not in (None, 0):
+                self._exited.add(g)
+                self.engine._errors.append(RuntimeError(
+                    f"process lane g{g} died (exit code {p.exitcode}) "
+                    f"without draining its staging area"))
+                # fail fast instead of deadlocking a block-policy
+                # producer against a lane that will never pop again
+                self.stages[g].close()
+
+    # ------------------------------------------------------------ control
+    def pre_finalize(self, pend) -> None:
+        # lanes flushed their appends to the page cache; make exactly
+        # the files this manifest references durable before the commit
+        if pend.ctx is not None and pend.ctx.records:
+            self.engine.db.fsync_files(r.file for r in pend.ctx.records)
+
+    def stop(self, timeout: float = 30.0) -> None:
+        for area in self.stages:
+            area.close()
+        killed = []
+        for p in self._procs:
+            if p.pid is None:            # never-started lane
+                continue
+            p.join(timeout=timeout)
+            if p.is_alive():
+                # a stuck lane is its own process: killing it cannot
+                # corrupt the parent; its un-reported bytes stay
+                # orphaned (no manifest references them)
+                p.terminate()
+                p.join(timeout=5.0)
+                killed.append(p.name)
+        self._stopping = True
+        if self._collector.ident is not None:
+            self._collector.join(timeout=timeout)
+        for area in self.stages:
+            area.unlink()
+        self._results.close()
+        self._results.join_thread()
+        if killed:
+            self.engine._errors.append(TimeoutError(
+                f"process lanes {killed} did not stop; terminated "
+                f"(unreported parts lost)"))
+
+
+register_backend("thread", ThreadLaneBackend)
+register_backend("process", ProcessLaneBackend)

@@ -46,6 +46,22 @@ class Reducer:
     kinds: tuple[str, ...] = ("amr",)   # snapshot kinds this reducer accepts
     merge: str | None = None            # multi-domain merge strategy
 
+    #: instance attributes that never pickle (jitted closures); process
+    #: lane backends ship reducers to spawned workers, which rebuild
+    #: them via ``__post_init__``
+    UNPICKLABLE: tuple[str, ...] = ()
+
+    def __getstate__(self):
+        state = dict(self.__dict__)
+        for attr in self.UNPICKLABLE:
+            state.pop(attr, None)
+        return state
+
+    def __setstate__(self, state):
+        self.__dict__.update(state)
+        if self.UNPICKLABLE and hasattr(self, "__post_init__"):
+            self.__post_init__()    # recompile the jitted closures
+
     def reduce(self, snap: Snapshot,
                upstream: dict[str, dict[str, np.ndarray]]
                ) -> dict[str, np.ndarray]:
@@ -216,6 +232,7 @@ class TensorNormReducer(Reducer):
     STAT_NAMES = ("l2", "rms", "absmax", "mean")
 
     merge = "concat"
+    UNPICKLABLE = ("_stats",)
 
     def __post_init__(self):
         self.name = "tnorm"
@@ -247,6 +264,7 @@ class SpectraReducer(Reducer):
     k: int = 8
 
     merge = "union"
+    UNPICKLABLE = ("_svd",)
 
     def __post_init__(self):
         self.name = f"spectra-k{self.k}"

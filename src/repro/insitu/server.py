@@ -1,0 +1,350 @@
+"""Server-mode catalog: one shared reduction cache for many viewers.
+
+The paper's post-processing scenario (and the in-situ services in
+VisIVO/IHPV-style pipelines) has analysis consumers as *remote
+processes* querying a catalog service. This module puts the
+:class:`~repro.insitu.catalog.Catalog` behind a small stdlib HTTP server
+so any number of viewer processes share one LRU reduction cache and one
+merge-at-read pass — instead of each process re-reading and re-merging
+the same domains.
+
+Wire format (``hx-frame/1``): array payloads travel as raw codec bytes
+with a JSON descriptor header, reusing the registered Hercule codecs —
+no pickle on the wire, any language can parse it:
+
+    b"HXF1" | u32 header_len | header JSON | payload bytes...
+
+    header = {"schema": "hx-frame/1",
+              "arrays": [{"name", "dtype", "shape", "codec", "meta",
+                          "nbytes"}, ...]}
+
+Payloads are codec-encoded per array (``raw`` by default; the server may
+opt into ``fpdelta-pyramid`` for large float arrays) and concatenated in
+header order; the client decodes through the same codec registry
+(:func:`repro.hercule.database.get_codec`).
+
+Endpoints (JSON unless framed):
+
+    GET /v1/manifest                         server + database summary
+    GET /v1/steps                            context steps
+    GET /v1/reducers?step=S                  reducer names in one context
+    GET /v1/attrs?step=S                     context attrs
+    GET /v1/domains?step=S&reducer=R         contributing domains
+    GET /v1/query?step=S&reducer=R[&domain=D][&region=a:b,c:d]   framed
+    GET /v1/series?reducer=R&name=N[&steps=s1,s2]                framed
+    GET /v1/stats                            shared-cache counters
+
+:class:`RemoteCatalog` mirrors ``Catalog.query`` / ``series`` /
+``domains`` (and the discovery surface) over these endpoints; a missing
+object raises :class:`KeyError` exactly like the local catalog.
+"""
+from __future__ import annotations
+
+import json
+import struct
+import threading
+import urllib.error
+import urllib.parse
+import urllib.request
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+import numpy as np
+
+from ..hercule.database import Record, get_codec
+from .catalog import Catalog
+
+FRAME_MAGIC = b"HXF1"
+FRAME_SCHEMA = "hx-frame/1"
+
+
+# ------------------------------------------------------------ wire format
+
+def pack_frame(arrays: dict[str, np.ndarray], *,
+               compress: bool = False) -> bytes:
+    """Encode named arrays as one hx-frame/1 message."""
+    descs, payloads = [], []
+    for name, arr in arrays.items():
+        arr = np.ascontiguousarray(arr)
+        codec, meta, payload = "raw", {}, None
+        if compress and arr.dtype.kind == "f" and arr.size >= 64:
+            enc, m = get_codec("fpdelta-pyramid").encode(arr)
+            if len(enc) < arr.nbytes:
+                payload, codec, meta = enc, "fpdelta-pyramid", m
+        if payload is None:   # raw only materialized when it wins
+            payload, _ = get_codec("raw").encode(arr)
+        descs.append({"name": name, "dtype": str(arr.dtype),
+                      "shape": list(arr.shape), "codec": codec,
+                      "meta": meta, "nbytes": len(payload)})
+        payloads.append(payload)
+    header = json.dumps({"schema": FRAME_SCHEMA, "arrays": descs}).encode()
+    return b"".join([FRAME_MAGIC, struct.pack("<I", len(header)), header,
+                     *payloads])
+
+
+def unpack_frame(data: bytes) -> dict[str, np.ndarray]:
+    """Decode one hx-frame/1 message through the codec registry."""
+    if data[:4] != FRAME_MAGIC:
+        raise ValueError("not an hx-frame/1 message")
+    (hlen,) = struct.unpack_from("<I", data, 4)
+    head = json.loads(data[8:8 + hlen].decode())
+    if head.get("schema") != FRAME_SCHEMA:
+        raise ValueError(f"unsupported frame schema {head.get('schema')!r}")
+    out, off = {}, 8 + hlen
+    for d in head["arrays"]:
+        payload = data[off:off + d["nbytes"]]
+        off += d["nbytes"]
+        rec = Record(name=d["name"], domain=0, file="", offset=0,
+                     nbytes=d["nbytes"], dtype=d["dtype"],
+                     shape=tuple(d["shape"]), codec=d["codec"],
+                     meta=d.get("meta", {}))
+        # frame codecs are self-contained (no cross-context predictors),
+        # so decode needs no database handle
+        out[d["name"]] = get_codec(d["codec"]).decode(None, rec, payload)
+    return out
+
+
+def _parse_region(spec: str):
+    """``"8:24,0:16"`` -> ((8, 24), (0, 16))."""
+    return tuple(tuple(int(x) for x in part.split(":"))
+                 for part in spec.split(","))
+
+
+def _format_region(region) -> str:
+    return ",".join(f"{int(lo)}:{int(hi)}" for lo, hi in region)
+
+
+# ----------------------------------------------------------------- server
+
+class CatalogServer:
+    """HTTP front-end over one shared :class:`Catalog`.
+
+    ``port=0`` binds an ephemeral port (read it back from ``.port``).
+    The handler threads all hit the same catalog, whose lock-guarded
+    LRU makes concurrent viewer queries share reductions.
+    """
+
+    def __init__(self, root, *, host: str = "127.0.0.1", port: int = 0,
+                 cache_entries: int = 64, compress: bool = False):
+        if isinstance(root, Catalog):
+            self.catalog, self._own_catalog = root, False
+        else:
+            self.catalog = Catalog(root, cache_entries=cache_entries)
+            self._own_catalog = True
+        self.compress = compress
+        handler = _make_handler(self.catalog, compress)
+        self.httpd = ThreadingHTTPServer((host, port), handler)
+        self.httpd.daemon_threads = True
+        self.host, self.port = self.httpd.server_address[:2]
+        self._thread: threading.Thread | None = None
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    def start(self) -> "CatalogServer":
+        """Serve on a background thread (tests, embedded viewers)."""
+        if self._thread is None:
+            self._thread = threading.Thread(
+                target=self.httpd.serve_forever, name="catalog-server",
+                daemon=True)
+            self._thread.start()
+        return self
+
+    def serve_forever(self) -> None:
+        self.httpd.serve_forever()
+
+    def close(self) -> None:
+        self.httpd.shutdown()
+        self.httpd.server_close()
+        if self._thread is not None:
+            self._thread.join(timeout=10.0)
+            self._thread = None
+        if self._own_catalog:
+            self.catalog.close()
+
+
+def _make_handler(catalog: Catalog, compress: bool):
+    class Handler(BaseHTTPRequestHandler):
+        protocol_version = "HTTP/1.1"
+
+        def log_message(self, fmt, *args):   # quiet by default
+            pass
+
+        # ------------------------------------------------------ responses
+        def _send(self, code: int, body: bytes, ctype: str) -> None:
+            self.send_response(code)
+            self.send_header("Content-Type", ctype)
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def _json(self, obj, code: int = 200) -> None:
+            self._send(code, json.dumps(obj).encode(), "application/json")
+
+        def _frame(self, arrays: dict) -> None:
+            self._send(200, pack_frame(arrays, compress=compress),
+                       "application/x-hx-frame")
+
+        # --------------------------------------------------------- routes
+        def do_GET(self):   # noqa: N802  (http.server API)
+            url = urllib.parse.urlsplit(self.path)
+            q = {k: v[-1] for k, v in
+                 urllib.parse.parse_qs(url.query).items()}
+            try:
+                self._route(url.path, q)
+            except (KeyError, FileNotFoundError) as e:
+                # a step with no manifest is as absent as an unknown
+                # reducer: both surface as KeyError on the client
+                self._json({"error": "not_found", "message": str(e)},
+                           code=404)
+            except (ValueError, TypeError) as e:
+                self._json({"error": "bad_request", "message": str(e)},
+                           code=400)
+            except BrokenPipeError:      # viewer went away mid-response
+                pass
+            except Exception as e:      # noqa: BLE001
+                self._json({"error": "internal", "message": repr(e)},
+                           code=500)
+
+        @staticmethod
+        def _param(q: dict, name: str) -> str:
+            try:
+                return q[name]
+            except KeyError:
+                # a client mistake, not an absent object: 400, not 404
+                raise ValueError(
+                    f"missing query parameter {name!r}") from None
+
+        def _route(self, path: str, q: dict) -> None:
+            if path == "/v1/manifest":
+                steps = catalog.steps()
+                self._json({"schema": "hx-catalog/1",
+                            "kind": catalog.db.kind,
+                            "steps": steps,
+                            "latest": steps[-1] if steps else None})
+            elif path == "/v1/steps":
+                self._json(catalog.steps())
+            elif path == "/v1/reducers":
+                self._json(catalog.reducers(int(self._param(q, "step"))))
+            elif path == "/v1/attrs":
+                self._json(catalog.attrs(int(self._param(q, "step"))))
+            elif path == "/v1/domains":
+                self._json(catalog.domains(int(self._param(q, "step")),
+                                           self._param(q, "reducer")))
+            elif path == "/v1/stats":
+                self._json(catalog.cache_info())
+            elif path == "/v1/query":
+                domain = int(q["domain"]) if "domain" in q else None
+                region = _parse_region(q["region"]) if "region" in q \
+                    else None
+                self._frame(catalog.query(int(self._param(q, "step")),
+                                          self._param(q, "reducer"),
+                                          region=region, domain=domain))
+            elif path == "/v1/series":
+                steps = [int(s) for s in q["steps"].split(",")] \
+                    if "steps" in q else None
+                out_steps, vals = catalog.series(self._param(q, "reducer"),
+                                                 self._param(q, "name"),
+                                                 steps=steps)
+                frame = {"steps": np.asarray(out_steps, np.int64)}
+                for i, v in enumerate(vals):
+                    frame[f"value/{i}"] = v
+                self._frame(frame)
+            else:
+                raise KeyError(f"no route {path!r}")
+
+    return Handler
+
+
+# ----------------------------------------------------------------- client
+
+class RemoteCatalog:
+    """Viewer-side twin of :class:`Catalog` over a catalog server.
+
+    ``query``/``series``/``domains`` (and the discovery surface) mirror
+    the local catalog's signatures; merge-at-read happens server-side,
+    so every viewer process shares the server's reduction cache.
+    """
+
+    def __init__(self, base_url: str, *, timeout: float = 30.0):
+        self.base_url = base_url.rstrip("/")
+        self.timeout = timeout
+
+    # ------------------------------------------------------------- plumbing
+    def _get(self, path: str, **params) -> bytes:
+        qs = urllib.parse.urlencode(
+            {k: v for k, v in params.items() if v is not None})
+        url = f"{self.base_url}{path}" + (f"?{qs}" if qs else "")
+        try:
+            with urllib.request.urlopen(url, timeout=self.timeout) as r:
+                return r.read()
+        except urllib.error.HTTPError as e:
+            body = e.read()
+            try:
+                msg = json.loads(body.decode()).get("message", "")
+            except Exception:
+                msg = body.decode(errors="replace")
+            if e.code == 404:
+                raise KeyError(msg) from None
+            raise RuntimeError(
+                f"catalog server error {e.code}: {msg}") from None
+
+    def _get_json(self, path: str, **params):
+        return json.loads(self._get(path, **params).decode())
+
+    def _get_frame(self, path: str, **params) -> dict[str, np.ndarray]:
+        return unpack_frame(self._get(path, **params))
+
+    # ------------------------------------------------------------ discovery
+    def manifest(self) -> dict:
+        return self._get_json("/v1/manifest")
+
+    def steps(self) -> list[int]:
+        return self._get_json("/v1/steps")
+
+    def latest_step(self) -> int | None:
+        return self.manifest()["latest"]
+
+    def reducers(self, step: int) -> list[str]:
+        return self._get_json("/v1/reducers", step=step)
+
+    def attrs(self, step: int) -> dict:
+        return self._get_json("/v1/attrs", step=step)
+
+    def domains(self, step: int, reducer: str) -> list[int]:
+        """Contributor domains holding parts of one reduced object."""
+        return self._get_json("/v1/domains", step=step, reducer=reducer)
+
+    def cache_info(self) -> dict:
+        """The *server's* shared-cache counters."""
+        return self._get_json("/v1/stats")
+
+    # ---------------------------------------------------------------- query
+    def query(self, step: int, reducer: str, *,
+              region=None, domain: int | None = None
+              ) -> dict[str, np.ndarray]:
+        """Fetch one reduced object; ``domain=None`` merges server-side."""
+        return self._get_frame(
+            "/v1/query", step=step, reducer=reducer, domain=domain,
+            region=_format_region(region) if region is not None else None)
+
+    def series(self, reducer: str, name: str, *,
+               steps: list[int] | None = None) -> tuple[np.ndarray, list]:
+        """(steps, values) time series of one array across contexts."""
+        frame = self._get_frame(
+            "/v1/series", reducer=reducer, name=name,
+            steps=",".join(str(s) for s in steps) if steps else None)
+        out_steps = frame.pop("steps")
+        vals = [frame[f"value/{i}"] for i in range(len(frame))]
+        return out_steps, vals
+
+
+def open_catalog(target: str, **kw):
+    """``http(s)://...`` -> :class:`RemoteCatalog`, else a local Catalog."""
+    if str(target).startswith(("http://", "https://")):
+        return RemoteCatalog(str(target), **kw)
+    return Catalog(target, **kw)
+
+
+__all__ = ["CatalogServer", "RemoteCatalog", "open_catalog",
+           "pack_frame", "unpack_frame", "FRAME_SCHEMA"]

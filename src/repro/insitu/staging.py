@@ -26,6 +26,10 @@ its own pace. Three pieces:
 from __future__ import annotations
 
 import dataclasses
+import json
+import multiprocessing
+import os
+import struct
 import threading
 import time
 
@@ -55,6 +59,7 @@ class Snapshot:
     domain: int = 0                   # contributor group of this part
     n_domains: int = 1                # groups the step was split into
     _bufset: "_BufferSet | None" = None
+    _slot: int | None = None          # shm slot (ShmStagingArea consumers)
 
 
 class _BufferSet:
@@ -278,3 +283,405 @@ class StagingArea:
     @property
     def closed(self) -> bool:
         return self._closed
+
+
+# ===================================================================== shm
+#
+# Cross-process twin of StagingArea: the slabs live in
+# ``multiprocessing.shared_memory`` so a *process* lane pops snapshots
+# without the producer's GIL and without any pickle round trip of the
+# bulk data. Layout:
+#
+#   control segment (int64 words):
+#     [0] closed   [1] q_head   [2] q_count   [3] n_slots
+#     [4          .. 4+n)   queue ring of slot ids (oldest at q_head)
+#     [4+n        .. 4+2n)  per-slot state (FREE/RESERVED/QUEUED/INFLIGHT)
+#     [4+2n       .. 4+6n)  per-slot meta: step, generation, domain, kind
+#
+#   one data segment per slot, resized (new generation) when a snapshot
+#   outgrows it — steady-state pushes reuse the mapping, the
+#   double-buffer discipline of ``_BufferSet`` carried across processes:
+#     [u64 header_len][JSON header][pad to 64][array payloads, 64-aligned]
+#
+# The JSON header (descriptor table: name/dtype/shape/offset per array,
+# plus kind/meta) is the only non-raw bytes crossing the boundary — no
+# pickle anywhere on the push/pop path. push() copies each array exactly
+# once, straight into the mapped slab; pop() returns zero-copy views.
+#
+# _push deliberately mirrors StagingArea._push's backpressure machine
+# rather than sharing it: the two sit on different primitives (pooled
+# ndarray buffers + threading.Condition vs shm slot states +
+# multiprocessing.Condition). Keep their policy semantics in lockstep —
+# tests/test_lane_backend.py enforces drop-oldest parity.
+
+_FREE, _RESERVED, _QUEUED, _INFLIGHT = 0, 1, 2, 3
+_KIND_CODES = {"amr": 0, "tensors": 1}
+_KIND_NAMES = {v: k for k, v in _KIND_CODES.items()}
+_ALIGN = 64
+
+
+def _align(n: int) -> int:
+    return -(-n // _ALIGN) * _ALIGN
+
+
+def _attach_shm(name: str, untrack: bool = False):
+    """Attach an existing shared-memory segment without tracker churn.
+
+    ``untrack`` marks an attach from a process that did not create the
+    segment: on 3.13+ it skips resource-tracker registration outright
+    (``track=False``). On 3.10-3.12 lane processes share the parent's
+    tracker, where the duplicate registration is a set-add no-op and
+    the creating side's ``unlink`` clears the single cache entry — so
+    no explicit unregister is needed (or safe: it would strip the
+    parent's registration, bpo-39959's other edge).
+    """
+    from multiprocessing import shared_memory
+    if untrack:
+        try:
+            return shared_memory.SharedMemory(name=name, track=False)
+        except TypeError:   # track= is 3.13+
+            pass
+    return shared_memory.SharedMemory(name=name)
+
+
+@dataclasses.dataclass
+class ShmHandle:
+    """Picklable attach spec for a lane process (see ShmStagingArea)."""
+    uid: str
+    pid: int                 # creating process (attach untracks elsewhere)
+    control: str
+    n_slots: int
+    capacity: int
+    lock: object
+    not_empty: object
+    not_full: object
+
+
+class ShmStagingArea:
+    """StagingArea over shared memory: producer in-parent, consumer anywhere.
+
+    Same bounded-queue/backpressure semantics as :class:`StagingArea`
+    (the policies, stats and ``on_evict`` contract are identical); the
+    buffer pool is a ring of shared-memory slots so the consumer side
+    may be an OS process. The parent constructs it and pushes; a lane
+    process calls :meth:`attach` on :meth:`handle` and pops. ``close``
+    only signals; :meth:`unlink` reclaims the segments once every
+    consumer detached (the owning backend calls it after joining lanes).
+    """
+
+    def __init__(self, *, capacity: int = 4, policy: str = "drop-oldest",
+                 n_slots: int | None = None, on_evict=None,
+                 min_slot_bytes: int = 1 << 16, mp_context=None):
+        from multiprocessing import shared_memory
+        assert policy in POLICIES, policy
+        assert capacity >= 1
+        self.capacity = capacity
+        self.policy = policy
+        self.on_evict = on_evict
+        self.min_slot_bytes = min_slot_bytes
+        n = n_slots or capacity + 2
+        ctx = mp_context or multiprocessing.get_context("spawn")
+        self._uid = f"hx{os.getpid():x}_{os.urandom(4).hex()}"
+        self._ctrl = shared_memory.SharedMemory(
+            create=True, size=(4 + 6 * n) * 8, name=f"{self._uid}ctl")
+        self._lock = ctx.Lock()
+        self._not_empty = ctx.Condition(self._lock)
+        self._not_full = ctx.Condition(self._lock)
+        self._bind(self._ctrl, n)
+        self._words[:] = 0
+        self._words[3] = n
+        #: producer-side segment cache: slot -> (gen, SharedMemory)
+        self._segs: dict[int, tuple[int, object]] = {}
+        self._stride = 1
+        self._slack = 0
+        self.stats = StagingStats()
+        self._consumer = False
+        self._untrack = False
+
+    def _bind(self, ctrl, n: int) -> None:
+        self.n_slots = n
+        self._words = np.ndarray((4 + 6 * n,), np.int64, buffer=ctrl.buf)
+        self._ring = self._words[4:4 + n]
+        self._state = self._words[4 + n:4 + 2 * n]
+        self._meta = self._words[4 + 2 * n:].reshape(n, 4)
+
+    # ---------------------------------------------------------- handle
+    def handle(self) -> ShmHandle:
+        return ShmHandle(uid=self._uid, pid=os.getpid(),
+                         control=self._ctrl.name,
+                         n_slots=self.n_slots, capacity=self.capacity,
+                         lock=self._lock, not_empty=self._not_empty,
+                         not_full=self._not_full)
+
+    @classmethod
+    def attach(cls, handle: ShmHandle) -> "ShmStagingArea":
+        """Consumer-side view (a lane process): pop/release/close only."""
+        self = cls.__new__(cls)
+        self._uid = handle.uid
+        self.capacity = handle.capacity
+        self._untrack = handle.pid != os.getpid()
+        self._ctrl = _attach_shm(handle.control, self._untrack)
+        self._lock = handle.lock
+        self._not_empty = handle.not_empty
+        self._not_full = handle.not_full
+        self._bind(self._ctrl, handle.n_slots)
+        self._segs = {}
+        self.on_evict = None
+        self._consumer = True
+        self.stats = StagingStats()   # consumer-side: unused, API parity
+        return self
+
+    # -------------------------------------------------------------- push
+    def push(self, step: int, arrays: dict, *, kind: str = "amr",
+             meta: dict | None = None, domain: int = 0,
+             n_domains: int = 1) -> bool:
+        victims: list[Snapshot] = []
+        try:
+            return self._push(step, arrays, kind, meta, domain, n_domains,
+                              victims)
+        finally:
+            if self.on_evict is not None:
+                for v in victims:
+                    self.on_evict(v)
+
+    def _evict_oldest(self, victims: list) -> None:
+        # caller holds the lock; q_count > 0
+        slot = int(self._ring[self._words[1]])
+        vstep, _, vdom, vkind = (int(x) for x in self._meta[slot])
+        self._words[1] = (self._words[1] + 1) % self.n_slots
+        self._words[2] -= 1
+        self._state[slot] = _FREE
+        self.stats.evicted += 1
+        victims.append(Snapshot(step=vstep, arrays={},
+                                kind=_KIND_NAMES.get(vkind, "amr"),
+                                domain=vdom))
+
+    def _data_name(self, slot: int, gen: int) -> str:
+        return f"{self._uid}s{slot}g{gen}"
+
+    def _wait_block(self) -> None:
+        t0 = time.perf_counter()
+        self._not_full.wait(timeout=0.5)
+        self.stats.block_seconds += time.perf_counter() - t0
+
+    def _push(self, step, arrays, kind, meta, domain, n_domains,
+              victims: list) -> bool:
+        with self._lock:
+            if self._words[0]:
+                raise RuntimeError("staging area is closed")
+            self.stats.pushed += 1
+            if self.policy == "subsample":
+                if step % self._stride != 0:
+                    self.stats.dropped += 1
+                    return False
+            while True:
+                free = np.flatnonzero(self._state == _FREE)
+                if self._words[2] < self.capacity and free.size:
+                    break
+                if self.policy == "block":
+                    self._wait_block()
+                    if self._words[0]:
+                        raise RuntimeError("staging area is closed")
+                    continue
+                if self.policy == "drop-oldest" and self._words[2]:
+                    self._evict_oldest(victims)
+                    continue
+                if self.policy == "subsample":
+                    self._stride = min(self._stride * 2, 1 << 16)
+                    self._slack = 0
+                self.stats.dropped += 1
+                return False
+            if self.policy == "subsample":
+                self._slack += 1
+                if self._stride > 1 and self._slack * 2 > self.capacity:
+                    self._stride //= 2
+                    self._slack = 0
+            slot = int(free[0])
+            self._state[slot] = _RESERVED
+        # the (possibly large) copy into the slab runs without the lock
+        try:
+            gen, nbytes, reused = self._fill(slot, step, arrays, kind,
+                                             meta, domain, n_domains)
+        except BaseException:
+            with self._lock:
+                self._state[slot] = _FREE
+                self._not_full.notify()
+            raise
+        with self._lock:
+            self.stats.buffer_reuses += int(reused)
+            self.stats.buffer_allocs += int(not reused)
+            self.stats.bytes_staged += nbytes
+            if self._words[2] >= self.capacity:
+                # another producer filled the queue during our copy
+                if self.policy == "drop-oldest":
+                    self._evict_oldest(victims)
+                elif self.policy != "block":
+                    self._state[slot] = _FREE
+                    self.stats.dropped += 1
+                    return False
+                else:
+                    while self._words[2] >= self.capacity:
+                        if self._words[0]:
+                            self._state[slot] = _FREE
+                            raise RuntimeError("staging area is closed")
+                        self._wait_block()
+            self._meta[slot] = (step, gen, domain,
+                                _KIND_CODES.get(kind, 0))
+            self._ring[(self._words[1] + self._words[2]) % self.n_slots] \
+                = slot
+            self._words[2] += 1
+            self._state[slot] = _QUEUED
+            self.stats.accepted += 1
+            self._not_empty.notify()
+            return True
+
+    def _fill(self, slot: int, step, arrays, kind, meta, domain,
+              n_domains) -> tuple[int, int, bool]:
+        """Copy one snapshot into the slot's slab; returns (gen, bytes,
+        reused) — ``reused`` False when the slab had to grow."""
+        from multiprocessing import shared_memory
+        host = [(name, np.ascontiguousarray(a))
+                for name, a in to_host(arrays).items()]
+        descs, off = [], 0
+        for name, a in host:
+            off = _align(off)
+            descs.append({"name": name, "dtype": str(a.dtype),
+                          "shape": list(a.shape), "offset": off})
+            off += a.nbytes
+        header = json.dumps({
+            "step": int(step), "kind": kind, "meta": dict(meta or {}),
+            "domain": int(domain), "n_domains": int(n_domains),
+            "arrays": descs}).encode()
+        base = _align(8 + len(header))
+        total = base + off
+        ent = self._segs.get(slot)
+        reused = ent is not None and ent[1].size >= total
+        if not reused:
+            gen = ent[0] + 1 if ent else 0
+            if ent:
+                ent[1].close()
+                ent[1].unlink()
+            size = max(total + total // 4, self.min_slot_bytes)
+            seg = shared_memory.SharedMemory(
+                create=True, size=size, name=self._data_name(slot, gen))
+            self._segs[slot] = (gen, seg)
+        gen, seg = self._segs[slot]
+        buf = seg.buf
+        struct.pack_into("<Q", buf, 0, len(header))
+        buf[8:8 + len(header)] = header
+        nbytes = 0
+        for d, (_, a) in zip(descs, host):
+            dst = np.ndarray(a.shape, a.dtype, buffer=buf,
+                             offset=base + d["offset"])
+            np.copyto(dst, a)
+            nbytes += a.nbytes
+        return gen, nbytes, reused
+
+    # --------------------------------------------------------------- pop
+    def _slot_views(self, slot: int, gen: int):
+        ent = self._segs.get(slot)
+        if ent is None or ent[0] != gen:
+            if ent is not None:
+                # a released-but-still-referenced snapshot (the lane
+                # loop's previous iteration) may export views of the old
+                # generation; tolerate it — the mapping falls with the
+                # last view
+                self._close_seg(ent[1])
+            seg = _attach_shm(self._data_name(slot, gen), self._untrack)
+            self._segs[slot] = (gen, seg)
+        _, seg = self._segs[slot]
+        buf = seg.buf
+        (hlen,) = struct.unpack_from("<Q", buf, 0)
+        head = json.loads(bytes(buf[8:8 + hlen]).decode())
+        base = _align(8 + hlen)
+        arrays = {}
+        for d in head["arrays"]:
+            arrays[d["name"]] = np.ndarray(
+                tuple(d["shape"]), np.dtype(d["dtype"]), buffer=buf,
+                offset=base + d["offset"])
+        return head, arrays
+
+    def pop(self, timeout: float | None = None) -> Snapshot | None:
+        """Oldest queued snapshot as zero-copy views into its slab."""
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        with self._lock:
+            while not self._words[2]:
+                if self._words[0]:
+                    return None
+                remaining = None if deadline is None else \
+                    deadline - time.perf_counter()
+                if remaining is not None and remaining <= 0:
+                    return None
+                self._not_empty.wait(
+                    timeout=remaining if remaining is not None else 0.5)
+            slot = int(self._ring[self._words[1]])
+            self._words[1] = (self._words[1] + 1) % self.n_slots
+            self._words[2] -= 1
+            self._state[slot] = _INFLIGHT
+            gen = int(self._meta[slot][1])
+            self._not_full.notify()
+        head, arrays = self._slot_views(slot, gen)
+        return Snapshot(step=head["step"], kind=head["kind"], arrays=arrays,
+                        meta=head["meta"], domain=head["domain"],
+                        n_domains=head["n_domains"], _slot=slot)
+
+    def release(self, snap: Snapshot) -> None:
+        """Return a popped snapshot's slab to the ring.
+
+        The snapshot's arrays are views into the slab — they must not be
+        used after release (the producer may refill the slot at once).
+        """
+        if snap._slot is None:
+            return
+        with self._lock:
+            self._state[snap._slot] = _FREE
+            snap._slot = None
+            self._not_full.notify()
+
+    # ------------------------------------------------------------- admin
+    def __len__(self) -> int:
+        with self._lock:
+            return int(self._words[2])
+
+    @property
+    def closed(self) -> bool:
+        return bool(self._words[0])
+
+    def close(self) -> None:
+        """Signal producers/consumers; segments survive until unlink()."""
+        with self._lock:
+            self._words[0] = 1
+            self._not_empty.notify_all()
+            self._not_full.notify_all()
+
+    @staticmethod
+    def _close_seg(seg) -> None:
+        try:
+            seg.close()
+        except BufferError:
+            pass   # a live view still exports the mapping; unlink works
+
+    def detach(self) -> None:
+        """Consumer side: drop the segment mappings (no unlink)."""
+        for _, seg in self._segs.values():
+            self._close_seg(seg)
+        self._segs.clear()
+        # drop numpy views before closing the mapping they alias
+        self._words = self._ring = self._state = self._meta = None
+        self._close_seg(self._ctrl)
+
+    def unlink(self) -> None:
+        """Owner side: reclaim every shared-memory segment.
+
+        Call after all consumers detached (on Linux their live mappings
+        stay valid; the names are gone for new attaches).
+        """
+        if self._consumer:
+            raise RuntimeError("only the creating side may unlink")
+        for _, seg in self._segs.values():
+            self._close_seg(seg)
+            seg.unlink()
+        self._segs.clear()
+        self._words = self._ring = self._state = self._meta = None
+        self._close_seg(self._ctrl)
+        self._ctrl.unlink()

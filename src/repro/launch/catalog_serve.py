@@ -1,0 +1,124 @@
+"""Catalog server CLI: ``python -m repro.launch.catalog_serve ...``
+
+Serves an in-transit HDep database to remote viewer processes over the
+``hx-frame/1`` wire format (see ``repro.insitu.server``): one process
+holds the reduction cache and performs merge-at-read; every viewer —
+``RemoteCatalog`` in Python, or anything that can parse a JSON header
+plus raw codec bytes — shares it.
+
+    python -m repro.launch.catalog_serve --root /tmp/hx_insitu
+    python -m repro.launch.catalog_serve --root ... --port 8265 --compress
+
+``--selftest`` is the CI smoke: it generates a small 2-domain in-transit
+database (unless ``--root`` points at an existing one), serves it on an
+ephemeral port, and verifies that ``RemoteCatalog.query(domain=None)``
+returns arrays equal to the local ``Catalog.query`` merge-at-read for
+every reduced object — then exits 0/1.
+"""
+from __future__ import annotations
+
+import argparse
+import shutil
+import tempfile
+
+import numpy as np
+
+
+def _make_demo_db(root: str, *, domains: int = 2, steps: int = 2) -> None:
+    """Small Sedov-based 2-domain in-transit database for the selftest."""
+    from ..insitu import (InTransitEngine, LevelHistogramReducer,
+                          LODCutReducer, ProjectionReducer, SliceReducer)
+    from ..sim import amrgen, fields
+    eng = InTransitEngine(root, [
+        LODCutReducer(max_level=3),
+        SliceReducer(field="density", axis=2, position=0.5, resolution=64),
+        ProjectionReducer(field="density", axis=2, resolution=64),
+        LevelHistogramReducer(field="density", bins=16, lo=0.0, hi=8.0),
+    ], domains=domains).start()
+    for s in range(1, steps + 1):
+        r_shock = 0.1 + 0.25 * s / steps
+        tree = amrgen.generate_tree(fields.sedov(r_shock=r_shock),
+                                    min_level=2, max_level=5, threshold=1.2)
+        eng.submit(s, tree)
+    eng.close()
+
+
+def _selftest(root: str | None, compress: bool) -> int:
+    from ..insitu import Catalog, CatalogServer, RemoteCatalog
+    tmp = None
+    if root is None:
+        tmp = tempfile.mkdtemp(prefix="hx_catalog_selftest_")
+        root = tmp
+        print(f"== selftest: generating 2-domain in-transit db in {root}")
+        _make_demo_db(root)
+    srv = CatalogServer(root, port=0, compress=compress).start()
+    local = Catalog(root)
+    try:
+        rc = RemoteCatalog(srv.url)
+        steps = rc.steps()
+        print(f"== serving {srv.url}: steps={steps}")
+        if steps != local.steps() or not steps:
+            print("   FAIL: step listing mismatch")
+            return 1
+        checked = mismatched = 0
+        for s in steps:
+            for reducer in local.reducers(s):
+                remote = rc.query(s, reducer)       # merge-at-read,
+                ref = local.query(s, reducer)       # server-side
+                for k, a in ref.items():
+                    checked += 1
+                    if not np.array_equal(a, remote[k], equal_nan=True):
+                        mismatched += 1
+                        print(f"   MISMATCH step={s} {reducer}/{k}")
+                if rc.domains(s, reducer) != local.domains(s, reducer):
+                    mismatched += 1
+                    print(f"   MISMATCH domains step={s} {reducer}")
+        info = rc.cache_info()
+        print(f"   {checked} arrays compared, {mismatched} mismatched; "
+              f"server cache: hits={info['hits']} misses={info['misses']}")
+        return 1 if mismatched or not checked else 0
+    finally:
+        srv.close()
+        local.close()
+        if tmp:
+            shutil.rmtree(tmp, ignore_errors=True)
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--root", default=None,
+                   help="in-transit HDep database directory")
+    p.add_argument("--host", default="127.0.0.1")
+    p.add_argument("--port", type=int, default=8265,
+                   help="0 binds an ephemeral port")
+    p.add_argument("--cache-entries", type=int, default=64,
+                   help="shared reduction-cache capacity")
+    p.add_argument("--compress", action="store_true",
+                   help="fpdelta-pyramid-encode large float payloads")
+    p.add_argument("--selftest", action="store_true",
+                   help="serve a demo db on an ephemeral port, verify "
+                        "RemoteCatalog == local Catalog, exit")
+    args = p.parse_args(argv)
+
+    if args.selftest:
+        return _selftest(args.root, args.compress)
+    if args.root is None:
+        p.error("--root is required (or use --selftest)")
+    from ..insitu import CatalogServer
+    srv = CatalogServer(args.root, host=args.host, port=args.port,
+                        cache_entries=args.cache_entries,
+                        compress=args.compress)
+    print(f"catalog server on {srv.url} (root={args.root}, "
+          f"cache={args.cache_entries} entries, "
+          f"compress={args.compress}) — Ctrl-C to stop")
+    try:
+        srv.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        srv.close()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -52,8 +52,15 @@ def main(argv=None):
                    help="contributor groups: each step is partitioned, "
                         "each group writes its own Hercule domain, and "
                         "catalog queries merge them back at read")
+    p.add_argument("--backend", default="thread",
+                   choices=["thread", "process"],
+                   help="lane runtime: in-process worker threads, or one "
+                        "OS process per group over shared-memory staging")
     p.add_argument("--queries", type=int, default=16,
                    help="viewer queries to replay against the catalog")
+    p.add_argument("--serve-check", action="store_true",
+                   help="also serve the catalog on an ephemeral port and "
+                        "verify RemoteCatalog == local merge-at-read")
     args = p.parse_args(argv)
 
     shutil.rmtree(args.out, ignore_errors=True)
@@ -62,11 +69,11 @@ def main(argv=None):
         args.out, reducers,
         output_every=args.output_every, workers=args.workers,
         queue_capacity=args.queue_capacity, policy=args.policy,
-        domains=args.domains).start()
+        domains=args.domains, backend=args.backend).start()
 
     print(f"== compute flow: {args.steps} Sedov steps "
           f"(policy={args.policy}, output_every={args.output_every}, "
-          f"domains={args.domains})")
+          f"domains={args.domains}, backend={args.backend})")
     t_compute = t_submit = 0.0
     for s in range(1, args.steps + 1):
         t0 = time.perf_counter()
@@ -138,6 +145,25 @@ def main(argv=None):
         print(f"   merge check {hname}: {len(parts)} domains, "
               f"counts {int(merged.sum())} == sum(parts) {total}: {ok}")
         if not ok:
+            return 1
+    if args.serve_check:
+        # server-mode catalog: remote viewers must see exactly the local
+        # merge-at-read answers, served from one shared cache
+        from ..insitu import CatalogServer, RemoteCatalog
+        srv = CatalogServer(cat, port=0).start()
+        rc = RemoteCatalog(srv.url)
+        n_arr = bad = 0
+        for name in names:
+            remote = rc.query(steps[-1], name)
+            local = cat.query(steps[-1], name)
+            for k, v in local.items():
+                n_arr += 1
+                if not np.array_equal(v, remote[k], equal_nan=True):
+                    bad += 1
+        print(f"   serve check {srv.url}: {n_arr} arrays, "
+              f"{bad} mismatched; server cache {rc.cache_info()}")
+        srv.close()
+        if bad:
             return 1
     full_slice = next(r for r in reducers
                       if isinstance(r, SliceReducer) and r.source is None)

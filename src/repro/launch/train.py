@@ -39,6 +39,10 @@ def main(argv=None):
     p.add_argument("--insitu-domains", type=int, default=1,
                    help="in-transit contributor groups (reduced objects "
                         "are written one domain per group, merged at read)")
+    p.add_argument("--insitu-backend", default="thread",
+                   choices=["thread", "process"],
+                   help="lane runtime: in-process worker threads, or one "
+                        "OS process per group over shared-memory staging")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
@@ -56,6 +60,7 @@ def main(argv=None):
         insitu_dir=args.insitu_dir, insitu_every=args.insitu_every,
         insitu_policy=args.insitu_policy,
         insitu_domains=args.insitu_domains,
+        insitu_backend=args.insitu_backend,
         seed=args.seed)
     trainer.run(args.steps)
     return 0

@@ -59,7 +59,7 @@ class Trainer:
                  hdep_dir: str | None = None, hdep_every: int = 0,
                  insitu_dir: str | None = None, insitu_every: int = 0,
                  insitu_reducers=None, insitu_policy: str = "drop-oldest",
-                 insitu_domains: int = 1):
+                 insitu_domains: int = 1, insitu_backend: str = "thread"):
         self.lm = lm
         self.cfg = lm.cfg
         self.opt_cfg = opt_cfg or optim.OptConfig()
@@ -80,9 +80,13 @@ class Trainer:
                                   TensorNormReducer)
             reducers = insitu_reducers if insitu_reducers is not None else \
                 [TensorNormReducer(), SpectraReducer(k=8)]
+            # backend="process" moves each contributor lane to its own
+            # OS process over shared-memory staging: reductions and
+            # domain writes stop competing with the train step's Python
             self.insitu = InTransitEngine(
                 insitu_dir, reducers, output_every=insitu_every,
-                policy=insitu_policy, ncf=ncf, domains=insitu_domains)
+                policy=insitu_policy, ncf=ncf, domains=insitu_domains,
+                backend=insitu_backend)
         self.monitor = StragglerMonitor()
         self.seed = seed
         self._stop = False

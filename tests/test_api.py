@@ -284,44 +284,12 @@ def test_contexts_skips_stray_dirs(db):
 
 # ------------------------------------------------------- deprecation shims
 
-def test_hdep_shims_warn_and_match_api(db):
+def test_hdep_shims_removed():
+    """DESIGN.md §11 countdown completed: the legacy free functions are
+    gone; the module survives only as a pointer at the unified API."""
     from repro.hercule import hdep
-    ctx = db.begin_context(5)
-    tensors = {"w": np.arange(12.0).reshape(3, 4)}
-    arrays = {"image": np.arange(9.0).reshape(3, 3)}
-    with pytest.deprecated_call():
-        hdep.write_analysis(ctx, 0, tensors)
-    with pytest.deprecated_call():
-        hdep.write_reduced(ctx, 0, "myred", arrays)
-    ctx.finalize()
-
-    with pytest.deprecated_call():
-        legacy = hdep.read_analysis(db, 5)
-    np.testing.assert_array_equal(legacy["w"], tensors["w"])
-    np.testing.assert_array_equal(
-        api.read_object(db, 5, "analysis")["w"], tensors["w"])
-
-    with pytest.deprecated_call():
-        legacy = hdep.read_reduced(db, 5, "myred")
-    np.testing.assert_array_equal(legacy["image"], arrays["image"])
-    with pytest.deprecated_call():
-        assert hdep.reducers_in(db, 5) == ["myred"]
-    with pytest.raises(KeyError):
-        api.read_object(db, 5, "reduced", reducer="absent")
-
-
-def test_hdep_tree_shims_warn_and_match_api(tmp_path):
-    from repro.hercule import hdep
-    from repro.sim import amrgen, fields
-    t = amrgen.generate_tree(fields.sedov(), min_level=2, max_level=3,
-                             threshold=1.2)
-    db = HerculeDB.create(str(tmp_path / "sh"), kind="hdep", ncf=1)
-    ctx = db.begin_context(0)
-    with pytest.deprecated_call():
-        hdep.write_domain_tree(ctx, 0, t)
-    ctx.finalize()
-    with pytest.deprecated_call():
-        rt = hdep.read_domain_tree(db, 0, 0)
-    assert np.array_equal(rt.refine, t.refine)
-    with pytest.deprecated_call():
-        assert hdep.domains_in(db, 0) == [0]
+    for name in ("write_domain_tree", "read_domain_tree", "domains_in",
+                 "write_analysis", "read_analysis", "write_reduced",
+                 "read_reduced", "reducers_in"):
+        assert not hasattr(hdep, name), f"shim {name} still present"
+    assert "repro.hercule.api" in (hdep.__doc__ or "")

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.hercule import HerculeDB, hdep
+from repro.hercule import HerculeDB, api
 from repro.hercule.checkpoint import CheckpointManager
 
 
@@ -146,9 +146,9 @@ def test_hdep_analysis_roundtrip(tmpdb):
     rng = np.random.default_rng(0)
     tensors = {"w1": (rng.standard_normal((64, 32)) * 1e-2).astype(np.float32),
                "stats": rng.standard_normal(1000)}
-    hdep.write_analysis(ctx, 0, tensors)
+    api.write_object(ctx, "analysis", 0, tensors)
     ctx.finalize()
-    out = hdep.read_analysis(db, 0)
+    out = api.read_object(db, 0, "analysis", 0)
     for k, v in tensors.items():
         np.testing.assert_array_equal(out[k], v)
 
@@ -163,9 +163,9 @@ def test_hdep_amr_object_roundtrip(tmp_path):
     pt = prune.prune(lt)
     db = HerculeDB.create(str(tmp_path / "hd"), kind="hdep", ncf=2)
     ctx = db.begin_context(0)
-    hdep.write_domain_tree(ctx, 1, pt)
+    api.write_object(ctx, "amr_tree", 1, pt)
     ctx.finalize()
-    rt = hdep.read_domain_tree(db, 0, 1)
+    rt = api.read_object(db, 0, "amr_tree", 1)
     rt.validate()
     assert np.array_equal(rt.refine, pt.refine)
     assert np.array_equal(rt.owner, pt.owner)

@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.core import decompose, prune
-from repro.hercule import HerculeDB, analysis, hdep
+from repro.hercule import HerculeDB, analysis, api
 from repro.insitu import (Catalog, InTransitEngine, LevelHistogramReducer,
                           LODCutReducer, ProjectionReducer, Reducer,
                           ReducerDAG, SliceReducer, StagingArea,
@@ -115,14 +115,14 @@ def test_write_read_reduced_roundtrip(tmp_path):
     arrays = {"image": rng.standard_normal((64, 64)),
               "edges": np.linspace(0, 1, 33),
               "hist": rng.integers(0, 100, (5, 32))}
-    hdep.write_reduced(ctx, 0, "myred", arrays)
+    api.write_object(ctx, "reduced", 0, arrays, reducer="myred")
     ctx.finalize()
-    out = hdep.read_reduced(db, 3, "myred")
+    out = api.read_object(db, 3, "reduced", 0, reducer="myred")
     for k, v in arrays.items():
         np.testing.assert_array_equal(out[k], v)
-    assert hdep.reducers_in(db, 3) == ["myred"]
+    assert api.REDUCED.reducers_in(db.view(3)) == ["myred"]
     with pytest.raises(KeyError):
-        hdep.read_reduced(db, 3, "absent")
+        api.read_object(db, 3, "reduced", 0, reducer="absent")
 
 
 # ------------------------------------------------- acceptance criteria (a-c)
@@ -166,7 +166,7 @@ def test_insitu_slice_matches_posthoc_and_cache(tmp_path, sedov_tree):
     ctx = full_db.begin_context(7)
     for d in range(4):
         lt = decompose.local_tree(tree, dom, d, coarse_level=1)
-        hdep.write_domain_tree(ctx, d, prune.prune(lt))
+        api.write_object(ctx, "amr_tree", d, prune.prune(lt))
     ctx.finalize()
     posthoc = analysis.slice_image(analysis.load_global_tree(full_db, 7),
                                    "density", axis=2, position=0.5,

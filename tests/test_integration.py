@@ -89,10 +89,10 @@ def test_hdep_analysis_dump_flow(tmp_path):
     tr = _mk_trainer(str(tmp_path / "c"), ckpt_every=50,
                      hdep_dir=str(tmp_path / "hdep"), hdep_every=5)
     tr.run(5)
-    from repro.hercule import HerculeDB, hdep
+    from repro.hercule import HerculeDB, api
     db = HerculeDB.open(str(tmp_path / "hdep"))
     assert db.contexts() == [5]
-    out = hdep.read_analysis(db, 5)
+    out = api.read_object(db, 5, "analysis", 0)
     assert out  # params dumped
     for v in out.values():
         assert np.isfinite(v).all()
