@@ -1,6 +1,8 @@
 """In-transit engine: compute-loop overhead (engine on vs off),
-reduction-query throughput vs post-hoc assembly, and multi-domain
-contributor-group scaling with merge-at-read verification.
+reduction-query throughput vs post-hoc assembly, multi-domain
+contributor-group scaling with merge-at-read verification, and the
+device-reduce transfer ratio (staged-on-accelerator reduction vs the
+host path's full-snapshot device→host copy).
 
 The paper's argument in numbers: a viewer hitting the reduced catalog
 should beat re-assembling the global tree from full HDep objects by a
@@ -176,6 +178,99 @@ def run_multidomain() -> float:
     return thr[4] / thr[1]
 
 
+# --------------------------------------------------- device-reduce mode
+
+DEVICE_STEPS = 3
+DEVICE_REPS = 3
+DEVICE_MAX_LEVEL = 9     # a deeper tree: full snapshots are ~43 MB/step
+
+
+def run_device() -> float:
+    """Device-resident staging + on-device reduction vs the host path.
+
+    Both engines run the 512-res reduction-bound DAG
+    (:func:`_live_reducers`) on identical snapshots of a deep Orion
+    tree. The host path stages every snapshot through a device→host
+    full-resolution copy before reducing; the device path
+    (``device_reduce=True``) stages on the accelerator and transfers
+    only the reduced objects, accounted by the engine's
+    ``device_stats``. Records the per-step bytes of both paths plus
+    their ratio (``insitu.device_transfer_ratio``, acceptance floor 5x)
+    and verifies the reduced catalogs are bit-identical. Returns the
+    transfer ratio.
+    """
+    tree, _, _ = orion_domains(16, max_level=DEVICE_MAX_LEVEL)
+    arrays = tree.to_arrays()
+    snap_bytes = sum(v.nbytes for v in arrays.values())
+
+    roots, times, bytes_per_step = {}, {}, {}
+    for mode in ("host", "device"):
+        root = scratch_dir(f"hx_bench_dev_{mode}_")
+        roots[mode] = root
+        eng = InTransitEngine(root, _live_reducers(), policy="block",
+                              queue_capacity=4,
+                              device_reduce=(mode == "device")).start()
+        eng.submit(DEVICE_STEPS + 1, arrays)      # warm lanes/compiles
+        eng.drain(timeout=300.0)
+        best, step = float("inf"), DEVICE_STEPS + 1
+        for _ in range(DEVICE_REPS):
+            t0 = time.perf_counter()
+            for _ in range(DEVICE_STEPS):
+                step += 1
+                eng.submit(step, arrays)
+            eng.drain(timeout=300.0)
+            best = min(best, time.perf_counter() - t0)
+        times[mode] = best
+        n_steps = len(eng.written_steps)
+        if mode == "device":
+            ds = eng.device_stats
+            bytes_per_step[mode] = ds["bytes_to_host"] / max(1, n_steps)
+            assert not ds["fallback_runs"], ds   # all three run on device
+        else:
+            stats = eng.staging.stats
+            bytes_per_step[mode] = stats.bytes_staged / max(1, n_steps)
+        eng.close()
+
+    # correctness: the device catalog must be bit-identical to the host
+    cat_h, cat_d = Catalog(roots["host"]), Catalog(roots["device"])
+    step = cat_h.steps()[-1]
+    checked = mismatched = 0
+    for reducer in cat_h.reducers(step):
+        a, b = cat_h.query(step, reducer), cat_d.query(step, reducer)
+        for k, v in a.items():
+            checked += 1
+            if not np.array_equal(v, b[k], equal_nan=True):
+                mismatched += 1
+    cat_h.db.close()
+    cat_d.db.close()
+    for root in roots.values():
+        shutil.rmtree(root, ignore_errors=True)
+    if mismatched:
+        raise AssertionError(
+            f"device-reduce mismatch: {mismatched}/{checked} arrays")
+
+    ratio = bytes_per_step["host"] / bytes_per_step["device"]
+    emit("insitu.device_bytes_transferred", bytes_per_step["device"],
+         f"device->host per step (reduced objects only), snapshot="
+         f"{snap_bytes/1e6:.1f}MB, arrays_checked={checked} "
+         f"mismatched={mismatched}", unit="bytes_per_step",
+         repeats=DEVICE_REPS)
+    emit("insitu.host_bytes_transferred", bytes_per_step["host"],
+         "host-path staging: full snapshot crosses per step",
+         unit="bytes_per_step", repeats=DEVICE_REPS)
+    emit("insitu.device_transfer_ratio", ratio,
+         f"host full-snapshot / device reduced bytes per step "
+         f"(acceptance floor 5x), 512-res DAG on "
+         f"{tree.n_nodes} nodes", unit="x", repeats=DEVICE_REPS)
+    emit("insitu.device_reduce_step", times["device"] / DEVICE_STEPS * 1e6,
+         f"{snap_bytes * DEVICE_STEPS / times['device'] / 1e6:.0f}MB/s "
+         f"device reduce throughput vs host "
+         f"{snap_bytes * DEVICE_STEPS / times['host'] / 1e6:.0f}MB/s "
+         f"(host step {times['host']/DEVICE_STEPS*1e6:.0f}us)",
+         repeats=DEVICE_REPS)
+    return ratio
+
+
 # ------------------------------------------------ live lane-backend mode
 
 LIVE_STEPS = 4
@@ -282,6 +377,9 @@ def run(n_domains: int = 16, steps: int = 8):
 
     # -------- live pipeline: thread vs process lane backends
     run_live_backends()
+
+    # -------- device-resident staging + on-device reduction
+    run_device()
 
     # ---------------- compute loop, engine OFF
     t0 = time.perf_counter()

@@ -24,6 +24,10 @@ written at an independent cadence.
     contributor group over shared-memory staging).
   * :mod:`engine`    — per-group lanes consuming staged snapshots and
     writing reduced HDep domains at the engine's own output frequency.
+  * :mod:`device`    — on-accelerator reduction: device-resident staging
+    (``DeviceStagingArea``) plus a device-reducer registry over the
+    Pallas rasterization kernels, so only *reduced* objects cross the
+    device→host boundary (``InTransitEngine(device_reduce=True)``).
   * :mod:`catalog`   — the read side: cached, domain-merged queries for
     many concurrent viewers.
   * :mod:`server`    — the catalog as a service: many viewer *processes*
@@ -31,12 +35,24 @@ written at an independent cadence.
 """
 from .catalog import Catalog                                   # noqa: F401
 from .engine import InTransitEngine                            # noqa: F401
-from .lanes import (BACKENDS, LaneBackend,                     # noqa: F401
-                    register_backend)
+from .lanes import (BACKENDS, LANE_POOL, LaneBackend,          # noqa: F401
+                    register_backend, shutdown_pool)
 from .partition import partition_snapshot                      # noqa: F401
 from .reducers import (LevelHistogramReducer, LODCutReducer,   # noqa: F401
                        ProjectionReducer, Reducer, ReducerDAG,
                        SliceReducer, SpectraReducer, TensorNormReducer)
 from .server import CatalogServer, RemoteCatalog               # noqa: F401
 from .staging import (POLICIES, ShmStagingArea, Snapshot,      # noqa: F401
-                      StagingArea)
+                      StagingArea, StrideController)
+
+_DEVICE_NAMES = ("DeviceStagingArea", "DeviceDAGRunner", "DeviceTree",
+                 "register_device_impl", "device_impl_for")
+
+
+def __getattr__(name: str):
+    # the device module pulls in jax at call time; keep the package
+    # import light for the (host-only) CLI paths
+    if name in _DEVICE_NAMES:
+        from . import device
+        return getattr(device, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -145,6 +145,20 @@ class Catalog:
         return np.asarray(out_steps, np.int64), vals
 
     # ----------------------------------------------------------------- admin
+    def invalidate_step(self, step: int) -> None:
+        """Drop every cached object of one step (rewritten context).
+
+        Contexts are normally immutable, which is the cache's premise —
+        but the engine's resubmission path *can* rewrite a step's
+        manifest. The catalog server calls this when the manifest
+        identity changes, so a fresh ETag never gets stamped onto stale
+        cached bytes.
+        """
+        with self._lock:
+            for key in [k for k in self._cache if k[0] == step]:
+                del self._cache[key]
+        self.db._invalidate_view(step)
+
     def cache_info(self) -> dict:
         with self._lock:
             return {"entries": len(self._cache), "hits": self.cache_hits,

@@ -73,17 +73,35 @@ class InTransitEngine:
                  queue_capacity: int = 4, policy: str = "drop-oldest",
                  ncf: int = 4, compress: bool = False, domains: int = 1,
                  durable_parts: bool = False, backend: str = "thread",
-                 step_ttl: float | None = None):
+                 step_ttl: float | None = None,
+                 device_reduce: bool = False, lane_pool: bool = False):
         from .lanes import BACKENDS
         if backend not in BACKENDS:   # before creating anything on disk
             raise ValueError(f"unknown lane backend {backend!r}; "
                              f"registered: {sorted(BACKENDS)}")
         self.n_domains = max(1, domains)
+        self.device_reduce = bool(device_reduce)
+        if self.device_reduce and backend != "thread":
+            # device arrays cannot cross to spawned lane processes; the
+            # device path exists precisely to avoid such copies
+            raise ValueError(
+                "device_reduce=True requires backend='thread' (device "
+                "arrays stay in the engine process)")
+        if lane_pool and backend != "process":
+            raise ValueError(
+                "lane_pool=True only applies to backend='process' "
+                "(thread lanes have no spawn cost to amortize)")
         if backend == "process" and self.n_domains > 1:
             ncf = 1   # each lane process must own its group files
         self.db = root if isinstance(root, HerculeDB) else \
             HerculeDB.create(root, kind="hdep", ncf=ncf)
         self.dag = ReducerDAG(reducers)
+        #: device-reduce runner (None = host DAG execution); staging
+        #: residency follows it — see lanes.ThreadLaneBackend
+        self._device = None
+        if self.device_reduce:
+            from .device import DeviceDAGRunner
+            self._device = DeviceDAGRunner(self.dag)
         self.compress = compress
         self.output_every = max(1, output_every)
         #: fsync each group file from its own lane right after the part
@@ -110,7 +128,7 @@ class InTransitEngine:
         #: contributor group (see insitu.lanes)
         self._backend = make_backend(backend, self, workers=workers,
                                      queue_capacity=queue_capacity,
-                                     policy=policy)
+                                     policy=policy, lane_pool=lane_pool)
         #: one staging area per contributor group; ``staging`` aliases
         #: group 0 for the single-group API the compute side always had
         self.stages = self._backend.stages
@@ -278,7 +296,8 @@ class InTransitEngine:
 
     def _reduce_and_write(self, snap: Snapshot):
         """Thread-backend execution of one part (in the engine process)."""
-        outputs = self.dag.run(snap)
+        outputs = self._device.run(snap) if self._device is not None \
+            else self.dag.run(snap)
         if not outputs:
             # no reducer accepted this snapshot kind — don't litter the
             # database with empty contexts; surface it via stats instead
@@ -464,6 +483,12 @@ class InTransitEngine:
         """Steps force-finalized (partial) by the step TTL."""
         with self._wlock:
             return self._ttl_expired
+
+    @property
+    def device_stats(self) -> dict | None:
+        """Device→host transfer accounting (None unless device_reduce)."""
+        return None if self._device is None else \
+            self._device.stats.as_dict()
 
     def check_errors(self) -> None:
         if self._errors:

@@ -80,17 +80,29 @@ class LaneBackend:
 
 
 class ThreadLaneBackend(LaneBackend):
-    """In-process worker threads (the original engine execution model)."""
+    """In-process worker threads (the original engine execution model).
+
+    With ``engine.device_reduce`` the staging areas are
+    :class:`~repro.insitu.device.DeviceStagingArea` — snapshots stay on
+    the accelerator and lanes run the DAG through the engine's
+    :class:`~repro.insitu.device.DeviceDAGRunner`; everything else
+    (queue bounds, policies, eviction countdown) is identical.
+    """
 
     name = "thread"
 
     def __init__(self, engine, *, workers: int, queue_capacity: int,
-                 policy: str):
+                 policy: str, lane_pool: bool = False):
         super().__init__(engine)
+        del lane_pool   # validated engine-side: process-lane concern
+        area_cls = StagingArea
+        if engine.device_reduce:
+            from .device import DeviceStagingArea
+            area_cls = DeviceStagingArea
         self.stages = [
-            StagingArea(capacity=queue_capacity, policy=policy,
-                        n_buffers=queue_capacity + max(1, workers) + 1,
-                        on_evict=engine._on_evict)
+            area_cls(capacity=queue_capacity, policy=policy,
+                     n_buffers=queue_capacity + max(1, workers) + 1,
+                     on_evict=engine._on_evict)
             for _ in range(engine.n_domains)]
         self._threads = [
             threading.Thread(target=self._worker, args=(area,),
@@ -186,6 +198,119 @@ def _lane_main(handle, root: str, group: int, reducers, compress: bool,
         results.put(("exit", None, group, None, None, None, None))
 
 
+def _pooled_lane_main(task_q, sync, results) -> None:
+    """Resident pooled lane: serve staging-attach jobs until poisoned.
+
+    Spawn+import cost is paid once; each task re-runs :func:`_lane_main`
+    against a fresh shared-memory area rebuilt from a primitive-free
+    spec plus the sync objects this process inherited at spawn
+    (``ShmStagingArea.handle_from_spec``). ``None`` ends the lane.
+    """
+    while True:
+        task = task_q.get()
+        if task is None:
+            return
+        spec, root, group, reducers, compress, durable_parts = task
+        handle = ShmStagingArea.handle_from_spec(spec, sync)
+        _lane_main(handle, root, group, reducers, compress, durable_parts,
+                   results)
+
+
+class _PooledLane:
+    """One resident lane process plus its spawn-inherited plumbing."""
+
+    def __init__(self, ctx, results, index: int):
+        self.task_q = ctx.Queue()
+        lock = ctx.Lock()
+        self.sync = (lock, ctx.Condition(lock), ctx.Condition(lock))
+        self.proc = ctx.Process(target=_pooled_lane_main,
+                                args=(self.task_q, self.sync, results),
+                                name=f"insitu-pool-lane{index}",
+                                daemon=True)
+
+
+class _PoolEntry:
+    """A reusable set of ``n`` lanes sharing one results queue."""
+
+    def __init__(self, n: int):
+        self.ctx = multiprocessing.get_context("spawn")
+        self.results = self.ctx.Queue()
+        self.lanes = [_PooledLane(self.ctx, self.results, i)
+                      for i in range(n)]
+        for lane in self.lanes:
+            lane.proc.start()
+
+    def alive(self) -> bool:
+        return all(lane.proc.is_alive() for lane in self.lanes)
+
+    def terminate(self) -> None:
+        for lane in self.lanes:
+            lane.task_q.put(None)
+        for lane in self.lanes:
+            lane.proc.join(timeout=5.0)
+            if lane.proc.is_alive():
+                lane.proc.terminate()
+                lane.proc.join(timeout=5.0)
+        self.results.close()
+        self.results.join_thread()
+
+
+class LanePool:
+    """Module-level pool of resident process lanes, keyed by group count.
+
+    ``InTransitEngine(backend="process", lane_pool=True)`` borrows a
+    matching entry (spawning one on first use) and returns it at
+    ``close()``, so short-lived pipelines stop paying the ~1-2 s
+    spawn+import per lane per engine. Lanes that failed to drain (or
+    died) are discarded, never re-pooled. Call :func:`shutdown_pool`
+    (or ``LANE_POOL.shutdown()``) to reclaim the resident processes.
+    """
+
+    def __init__(self):
+        self._free: dict[int, list[_PoolEntry]] = {}
+        self._lock = threading.Lock()
+
+    def acquire(self, n: int) -> _PoolEntry:
+        dead: list[_PoolEntry] = []
+        try:
+            with self._lock:
+                entries = self._free.get(n, [])
+                while entries:
+                    entry = entries.pop()
+                    if entry.alive():
+                        return entry
+                    dead.append(entry)   # a lane died while parked
+            return _PoolEntry(n)
+        finally:
+            for entry in dead:           # joins run outside the lock
+                entry.terminate()
+
+    def release(self, entry: _PoolEntry) -> None:
+        if not entry.alive():
+            entry.terminate()
+            return
+        with self._lock:
+            self._free.setdefault(len(entry.lanes), []).append(entry)
+
+    def shutdown(self) -> None:
+        """Terminate every parked lane (borrowed entries die with their
+        engine's ``close``-time discard)."""
+        with self._lock:
+            entries = [e for lst in self._free.values() for e in lst]
+            self._free.clear()
+        for entry in entries:
+            entry.terminate()
+
+
+#: the process-lane pool (ISSUE 5: amortize lane spawn across engines)
+LANE_POOL = LanePool()
+
+
+def shutdown_pool() -> None:
+    """Reclaim every parked pooled lane process."""
+    LANE_POOL.shutdown()
+
+
 class ProcessLaneBackend(LaneBackend):
     """One spawned OS process per contributor group over shm staging.
 
@@ -207,7 +332,7 @@ class ProcessLaneBackend(LaneBackend):
     name = "process"
 
     def __init__(self, engine, *, workers: int, queue_capacity: int,
-                 policy: str):
+                 policy: str, lane_pool: bool = False):
         super().__init__(engine)
         db = engine.db
         if engine.n_domains > 1 and db.ncf != 1:
@@ -215,30 +340,54 @@ class ProcessLaneBackend(LaneBackend):
                 f"backend='process' needs one Hercule group per domain so "
                 f"each lane owns its files; database has ncf={db.ncf} "
                 f"(create the engine with ncf=1)")
-        ctx = multiprocessing.get_context("spawn")
+        self._pooled = bool(lane_pool)
+        self._entry = None
+        if self._pooled:
+            # borrow resident lanes; their sync primitives were
+            # inherited at spawn, so the fresh staging areas adopt them
+            self._entry = LANE_POOL.acquire(engine.n_domains)
+            ctx = self._entry.ctx
+            self.stages = [
+                ShmStagingArea(capacity=queue_capacity, policy=policy,
+                               n_slots=queue_capacity + 2,
+                               on_evict=engine._on_evict, mp_context=ctx,
+                               sync=lane.sync)
+                for lane in self._entry.lanes]
+            self._results = self._entry.results
+            self._procs = [lane.proc for lane in self._entry.lanes]
+        else:
+            ctx = multiprocessing.get_context("spawn")
+            self.stages = [
+                ShmStagingArea(capacity=queue_capacity, policy=policy,
+                               n_slots=queue_capacity + 2,
+                               on_evict=engine._on_evict, mp_context=ctx)
+                for _ in range(engine.n_domains)]
+            self._results = ctx.Queue()
+            reducers = list(engine.dag)
+            self._procs = [
+                ctx.Process(target=_lane_main,
+                            args=(area.handle(), db.root, g, reducers,
+                                  engine.compress, engine.durable_parts,
+                                  self._results),
+                            name=f"insitu-lane-g{g}", daemon=True)
+                for g, area in enumerate(self.stages)]
         self._mp = ctx
-        self.stages = [
-            ShmStagingArea(capacity=queue_capacity, policy=policy,
-                           n_slots=queue_capacity + 2,
-                           on_evict=engine._on_evict, mp_context=ctx)
-            for _ in range(engine.n_domains)]
-        self._results = ctx.Queue()
-        reducers = list(engine.dag)
-        self._procs = [
-            ctx.Process(target=_lane_main,
-                        args=(area.handle(), db.root, g, reducers,
-                              engine.compress, engine.durable_parts,
-                              self._results),
-                        name=f"insitu-lane-g{g}", daemon=True)
-            for g, area in enumerate(self.stages)]
         self._collector = threading.Thread(
             target=self._collect, name="insitu-collector", daemon=True)
         self._stopping = False
         self._exited: set[int] = set()
 
     def start(self) -> None:
-        for p in self._procs:
-            p.start()
+        if self._pooled:
+            engine = self.engine
+            reducers = list(engine.dag)
+            for g, (lane, area) in enumerate(zip(self._entry.lanes,
+                                                 self.stages)):
+                lane.task_q.put((area.spec(), engine.db.root, g, reducers,
+                                 engine.compress, engine.durable_parts))
+        else:
+            for p in self._procs:
+                p.start()
         self._collector.start()
 
     # ------------------------------------------------------- result intake
@@ -247,6 +396,8 @@ class ProcessLaneBackend(LaneBackend):
         while True:
             try:
                 msg = self._results.get(timeout=0.25)
+            except (ValueError, OSError):
+                return   # results queue torn down under a stuck stop
             except queue.Empty:
                 eng._run_deferred()
                 eng._sweep_ttl()
@@ -313,6 +464,9 @@ class ProcessLaneBackend(LaneBackend):
     def stop(self, timeout: float = 30.0) -> None:
         for area in self.stages:
             area.close()
+        if self._pooled:
+            self._stop_pooled(timeout)
+            return
         killed = []
         for p in self._procs:
             if p.pid is None:            # never-started lane
@@ -336,6 +490,26 @@ class ProcessLaneBackend(LaneBackend):
             self.engine._errors.append(TimeoutError(
                 f"process lanes {killed} did not stop; terminated "
                 f"(unreported parts lost)"))
+
+    def _stop_pooled(self, timeout: float) -> None:
+        """Wind down borrowed pooled lanes: wait for their per-job 'exit'
+        reports (the lane process itself stays alive), then return the
+        entry to the pool — or discard it if anything looks wrong."""
+        clean = True
+        if self._collector.ident is not None:
+            self._collector.join(timeout=timeout)
+            clean = (not self._collector.is_alive()
+                     and len(self._exited) == len(self._procs))
+        self._stopping = True
+        for area in self.stages:
+            area.unlink()
+        if clean and self._entry.alive():
+            LANE_POOL.release(self._entry)
+        else:
+            self._entry.terminate()
+            self.engine._errors.append(TimeoutError(
+                "pooled process lanes did not finish their jobs; "
+                "lanes discarded (unreported parts lost)"))
 
 
 register_backend("thread", ThreadLaneBackend)

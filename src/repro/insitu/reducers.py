@@ -45,6 +45,10 @@ class Reducer:
     deps: tuple[str, ...] = ()
     kinds: tuple[str, ...] = ("amr",)   # snapshot kinds this reducer accepts
     merge: str | None = None            # multi-domain merge strategy
+    #: ``reduce`` accepts jax device arrays directly (no host snapshot
+    #: needed) — the device-reduce path (``insitu.device``) skips the
+    #: full-snapshot fallback transfer for such reducers
+    device_ready: bool = False
 
     #: instance attributes that never pickle (jitted closures); process
     #: lane backends ship reducers to spawned workers, which rebuild
@@ -232,6 +236,7 @@ class TensorNormReducer(Reducer):
     STAT_NAMES = ("l2", "rms", "absmax", "mean")
 
     merge = "concat"
+    device_ready = True
     UNPICKLABLE = ("_stats",)
 
     def __post_init__(self):
@@ -264,6 +269,7 @@ class SpectraReducer(Reducer):
     k: int = 8
 
     merge = "union"
+    device_ready = True
     UNPICKLABLE = ("_svd",)
 
     def __post_init__(self):

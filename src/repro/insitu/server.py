@@ -40,7 +40,11 @@ object raises :class:`KeyError` exactly like the local catalog.
 """
 from __future__ import annotations
 
+import collections
+import hashlib
+import hmac
 import json
+import os
 import struct
 import threading
 import urllib.error
@@ -51,7 +55,7 @@ from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 import numpy as np
 
 from ..hercule.database import Record, get_codec
-from .catalog import Catalog
+from .catalog import Catalog, _normalize_region
 
 FRAME_MAGIC = b"HXF1"
 FRAME_SCHEMA = "hx-frame/1"
@@ -121,17 +125,26 @@ class CatalogServer:
     ``port=0`` binds an ephemeral port (read it back from ``.port``).
     The handler threads all hit the same catalog, whose lock-guarded
     LRU makes concurrent viewer queries share reductions.
+
+    ``token`` switches on bearer authentication: every request must
+    carry ``Authorization: Bearer <token>`` (compared constant-time) or
+    is refused with 401 — the minimum for a deployment beyond
+    localhost. ``/v1/query`` responses carry an ``ETag`` derived from
+    the immutable context manifest, and ``If-None-Match`` revalidation
+    answers 304 with no body — a hot viewer re-polling the same object
+    skips the transfer entirely (see :class:`RemoteCatalog`).
     """
 
     def __init__(self, root, *, host: str = "127.0.0.1", port: int = 0,
-                 cache_entries: int = 64, compress: bool = False):
+                 cache_entries: int = 64, compress: bool = False,
+                 token: str | None = None):
         if isinstance(root, Catalog):
             self.catalog, self._own_catalog = root, False
         else:
             self.catalog = Catalog(root, cache_entries=cache_entries)
             self._own_catalog = True
         self.compress = compress
-        handler = _make_handler(self.catalog, compress)
+        handler = _make_handler(self.catalog, compress, token)
         self.httpd = ThreadingHTTPServer((host, port), handler)
         self.httpd.daemon_threads = True
         self.host, self.port = self.httpd.server_address[:2]
@@ -163,7 +176,13 @@ class CatalogServer:
             self.catalog.close()
 
 
-def _make_handler(catalog: Catalog, compress: bool):
+def _make_handler(catalog: Catalog, compress: bool,
+                  token: str | None = None):
+    #: step -> last seen manifest identity; a change means the context
+    #: was rewritten (engine resubmission) and cached bytes are stale
+    idents: dict[int, tuple[int, int]] = {}
+    ident_lock = threading.Lock()
+
     class Handler(BaseHTTPRequestHandler):
         protocol_version = "HTTP/1.1"
 
@@ -171,19 +190,59 @@ def _make_handler(catalog: Catalog, compress: bool):
             pass
 
         # ------------------------------------------------------ responses
-        def _send(self, code: int, body: bytes, ctype: str) -> None:
+        def _send(self, code: int, body: bytes, ctype: str,
+                  headers: dict | None = None) -> None:
             self.send_response(code)
             self.send_header("Content-Type", ctype)
             self.send_header("Content-Length", str(len(body)))
+            for k, v in (headers or {}).items():
+                self.send_header(k, v)
             self.end_headers()
             self.wfile.write(body)
 
-        def _json(self, obj, code: int = 200) -> None:
-            self._send(code, json.dumps(obj).encode(), "application/json")
+        def _json(self, obj, code: int = 200,
+                  headers: dict | None = None) -> None:
+            self._send(code, json.dumps(obj).encode(), "application/json",
+                       headers)
 
-        def _frame(self, arrays: dict) -> None:
+        def _frame(self, arrays: dict, headers: dict | None = None) -> None:
             self._send(200, pack_frame(arrays, compress=compress),
-                       "application/x-hx-frame")
+                       "application/x-hx-frame", headers)
+
+        # ----------------------------------------------------------- auth
+        def _authorized(self) -> bool:
+            if token is None:
+                return True
+            got = self.headers.get("Authorization", "")
+            # constant-time compare: an attacker probing byte by byte
+            # learns nothing from response timing
+            return hmac.compare_digest(got.encode(),
+                                       f"Bearer {token}".encode())
+
+        # ----------------------------------------------------------- etag
+        def _query_etag(self, step: int, reducer: str,
+                        domain: int | None, region) -> str:
+            """Validator for one reduced object.
+
+            Contexts are immutable once finalized, so the manifest's
+            identity (mtime + size) pins the object's bytes; the query
+            key makes the tag vary per object/crop. A rewritten context
+            (engine resubmission, rebuilt database) changes the
+            manifest stat: the tag rotates *and* the server's cached
+            bytes for that step are dropped first, so a fresh validator
+            is never stamped onto stale LRU content.
+            """
+            st = os.stat(os.path.join(catalog.db._ctx_dir(step),
+                                      "MANIFEST.json"))
+            ident = (st.st_mtime_ns, st.st_size)
+            with ident_lock:
+                stale = idents.get(step, ident) != ident
+                idents[step] = ident
+            if stale:
+                catalog.invalidate_step(step)
+            key = (f"{st.st_mtime_ns}/{st.st_size}/{step}/{reducer}/"
+                   f"{domain}/{region}")
+            return '"' + hashlib.sha1(key.encode()).hexdigest() + '"'
 
         # --------------------------------------------------------- routes
         def do_GET(self):   # noqa: N802  (http.server API)
@@ -191,6 +250,12 @@ def _make_handler(catalog: Catalog, compress: bool):
             q = {k: v[-1] for k, v in
                  urllib.parse.parse_qs(url.query).items()}
             try:
+                if not self._authorized():
+                    self._json({"error": "unauthorized",
+                                "message": "missing or bad bearer token"},
+                               code=401,
+                               headers={"WWW-Authenticate": "Bearer"})
+                    return
                 self._route(url.path, q)
             except (KeyError, FileNotFoundError) as e:
                 # a step with no manifest is as absent as an unknown
@@ -237,9 +302,23 @@ def _make_handler(catalog: Catalog, compress: bool):
                 domain = int(q["domain"]) if "domain" in q else None
                 region = _parse_region(q["region"]) if "region" in q \
                     else None
-                self._frame(catalog.query(int(self._param(q, "step")),
-                                          self._param(q, "reducer"),
-                                          region=region, domain=domain))
+                step = int(self._param(q, "step"))
+                reducer = self._param(q, "reducer")
+                tag = self._query_etag(step, reducer, domain,
+                                       q.get("region"))
+                inm = self.headers.get("If-None-Match")
+                if inm is not None and tag in (
+                        t.strip() for t in inm.split(",")):
+                    # client already holds these exact bytes: headers
+                    # only, no body (RFC 9110 §15.4.5)
+                    self.send_response(304)
+                    self.send_header("ETag", tag)
+                    self.send_header("Content-Length", "0")
+                    self.end_headers()
+                    return
+                self._frame(catalog.query(step, reducer, region=region,
+                                          domain=domain),
+                            headers={"ETag": tag})
             elif path == "/v1/series":
                 steps = [int(s) for s in q["steps"].split(",")] \
                     if "steps" in q else None
@@ -264,21 +343,50 @@ class RemoteCatalog:
     ``query``/``series``/``domains`` (and the discovery surface) mirror
     the local catalog's signatures; merge-at-read happens server-side,
     so every viewer process shares the server's reduction cache.
+
+    Queries keep a client-side ETag cache keyed on ``(step, reducer,
+    region, domain)``: a revalidation that answers 304 costs one
+    header-only round trip and **zero payload bytes** — the hot-viewer
+    polling loop stops re-downloading unchanged reductions
+    (``etag_hits``/``etag_misses``, :meth:`client_cache_info`).
+    ``token`` adds ``Authorization: Bearer`` to every request; a 401
+    surfaces as :class:`PermissionError`.
     """
 
-    def __init__(self, base_url: str, *, timeout: float = 30.0):
+    def __init__(self, base_url: str, *, timeout: float = 30.0,
+                 token: str | None = None, cache_entries: int = 32):
         self.base_url = base_url.rstrip("/")
         self.timeout = timeout
+        self.token = token
+        self.cache_entries = cache_entries
+        #: (step, reducer, domain, region) -> (etag, frozen arrays)
+        self._etag_cache: collections.OrderedDict = collections.OrderedDict()
+        self._cache_lock = threading.Lock()
+        self.etag_hits = 0
+        self.etag_misses = 0
 
     # ------------------------------------------------------------- plumbing
-    def _get(self, path: str, **params) -> bytes:
+    def _request(self, path: str, headers: dict | None = None,
+                 **params) -> tuple[int, bytes, dict]:
+        """One GET; returns (status, body, response headers).
+
+        304 is a *result* here (ETag revalidation), not an error; 404
+        maps to KeyError (local-catalog parity) and 401 to
+        PermissionError.
+        """
         qs = urllib.parse.urlencode(
             {k: v for k, v in params.items() if v is not None})
         url = f"{self.base_url}{path}" + (f"?{qs}" if qs else "")
+        req = urllib.request.Request(url, headers=dict(headers or {}))
+        if self.token is not None:
+            req.add_header("Authorization", f"Bearer {self.token}")
         try:
-            with urllib.request.urlopen(url, timeout=self.timeout) as r:
-                return r.read()
+            with urllib.request.urlopen(req, timeout=self.timeout) as r:
+                return r.status, r.read(), dict(r.headers)
         except urllib.error.HTTPError as e:
+            if e.code == 304:
+                e.read()
+                return 304, b"", dict(e.headers)
             body = e.read()
             try:
                 msg = json.loads(body.decode()).get("message", "")
@@ -286,8 +394,14 @@ class RemoteCatalog:
                 msg = body.decode(errors="replace")
             if e.code == 404:
                 raise KeyError(msg) from None
+            if e.code == 401:
+                raise PermissionError(
+                    f"catalog server refused the request: {msg}") from None
             raise RuntimeError(
                 f"catalog server error {e.code}: {msg}") from None
+
+    def _get(self, path: str, **params) -> bytes:
+        return self._request(path, **params)[1]
 
     def _get_json(self, path: str, **params):
         return json.loads(self._get(path, **params).decode())
@@ -319,14 +433,51 @@ class RemoteCatalog:
         """The *server's* shared-cache counters."""
         return self._get_json("/v1/stats")
 
+    def client_cache_info(self) -> dict:
+        """This viewer's ETag-cache counters."""
+        with self._cache_lock:
+            return {"entries": len(self._etag_cache),
+                    "etag_hits": self.etag_hits,
+                    "etag_misses": self.etag_misses}
+
     # ---------------------------------------------------------------- query
     def query(self, step: int, reducer: str, *,
               region=None, domain: int | None = None
               ) -> dict[str, np.ndarray]:
-        """Fetch one reduced object; ``domain=None`` merges server-side."""
-        return self._get_frame(
-            "/v1/query", step=step, reducer=reducer, domain=domain,
+        """Fetch one reduced object; ``domain=None`` merges server-side.
+
+        Revalidates through the ETag cache: a 304 answer serves the
+        cached arrays without transferring the payload again. Cached
+        arrays are frozen (mutating callers take a ``.copy()``), like
+        the local catalog's.
+        """
+        region = _normalize_region(region)
+        key = (step, reducer, domain, region)
+        with self._cache_lock:
+            ent = self._etag_cache.get(key)
+            if ent is not None:
+                self._etag_cache.move_to_end(key)
+        status, body, rh = self._request(
+            "/v1/query",
+            headers={"If-None-Match": ent[0]} if ent else None,
+            step=step, reducer=reducer, domain=domain,
             region=_format_region(region) if region is not None else None)
+        if status == 304:
+            with self._cache_lock:
+                self.etag_hits += 1
+            return dict(ent[1])
+        arrays = unpack_frame(body)
+        for arr in arrays.values():
+            arr.flags.writeable = False
+        etag = {k.lower(): v for k, v in rh.items()}.get("etag")
+        with self._cache_lock:
+            self.etag_misses += 1
+            if etag:
+                self._etag_cache[key] = (etag, arrays)
+                self._etag_cache.move_to_end(key)
+                while len(self._etag_cache) > self.cache_entries:
+                    self._etag_cache.popitem(last=False)
+        return dict(arrays)
 
     def series(self, reducer: str, name: str, *,
                steps: list[int] | None = None) -> tuple[np.ndarray, list]:

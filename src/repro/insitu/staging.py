@@ -18,15 +18,17 @@ its own pace. Three pieces:
       - ``block``       compute waits for space (lossless, may stall);
       - ``drop-oldest`` evict the oldest waiting snapshot, accept the new
         one (viewers always see the freshest data; compute never stalls);
-      - ``subsample``   adaptively decimate the accepted cadence: every
-        overflow doubles the stride between accepted snapshots, sustained
-        slack halves it (compute never stalls, surviving snapshots are
-        evenly spaced in step number).
+      - ``subsample``   adaptively decimate the accepted cadence: a
+        PID-style controller (:class:`StrideController`) watches the
+        observed queue depth and steers the stride between accepted
+        snapshots toward the consumer's actual drain rate (compute never
+        stalls, surviving snapshots are evenly spaced in step number).
 """
 from __future__ import annotations
 
 import dataclasses
 import json
+import math
 import multiprocessing
 import os
 import struct
@@ -36,6 +38,65 @@ import time
 import numpy as np
 
 POLICIES = ("block", "drop-oldest", "subsample")
+
+
+class StrideController:
+    """PID-style subsample-stride control from observed queue depth.
+
+    Replaces the old heuristic (double on overflow, halve on sustained
+    slack), whose step response hunted between extremes. The plant
+    state is the queue fill fraction; the setpoint keeps the queue
+    half full — enough slack to absorb bursts, enough depth that the
+    consumer never starves. The control signal moves ``log2(stride)``,
+    so corrections are multiplicative and the stride stays a positive
+    integer; under constant load it converges to the consumer's service
+    ratio instead of oscillating (asserted by
+    ``tests/test_insitu.py::test_subsample_stride_converges``).
+
+    ``observe(depth)`` runs once per push attempt; ``overflow()`` adds
+    a hard kick when the queue actually overflowed (the integral is
+    also floored at zero there — anti-windup, so a long full-queue
+    episode does not leave a huge stride to unwind).
+
+    Gain note: the output is an *increment* to log2(stride), so each
+    term acts one integration higher than its name — the P term is the
+    loop's integral action (the queue depth already integrates the
+    accept−drain rate mismatch) and the D term its proportional
+    damping. ``ki`` therefore defaults to 0: a true double-integral
+    path destabilizes high service ratios; the term stays available
+    for plants with persistent depth bias.
+    """
+
+    MAX_STRIDE = 1 << 16
+
+    def __init__(self, capacity: int, *, setpoint: float = 0.5,
+                 kp: float = 0.03, ki: float = 0.0, kd: float = 0.5):
+        self.capacity = max(1, int(capacity))
+        self.setpoint = setpoint
+        self.kp, self.ki, self.kd = kp, ki, kd
+        self._log = 0.0                    # log2 of the stride
+        self._integral = 0.0
+        self._prev: float | None = None
+
+    @property
+    def stride(self) -> int:
+        return max(1, int(round(2.0 ** self._log)))
+
+    def observe(self, depth: int) -> int:
+        """Update from the current queue depth; returns the new stride."""
+        err = depth / self.capacity - self.setpoint
+        self._integral = min(max(self._integral + err, -4.0), 4.0)
+        deriv = 0.0 if self._prev is None else err - self._prev
+        self._prev = err
+        u = self.kp * err + self.ki * self._integral + self.kd * deriv
+        self._log = min(max(self._log + u, 0.0),
+                        math.log2(self.MAX_STRIDE))
+        return self.stride
+
+    def overflow(self) -> None:
+        """The queue/pool actually overflowed: step the stride up hard."""
+        self._log = min(self._log + 1.0, math.log2(self.MAX_STRIDE))
+        self._integral = max(self._integral, 0.0)
 
 
 def to_host(arrays: dict) -> dict[str, np.ndarray]:
@@ -68,15 +129,18 @@ class _BufferSet:
     def __init__(self):
         self.buffers: dict[str, np.ndarray] = {}
 
-    def fill(self, arrays: dict[str, np.ndarray]):
-        """Copy ``arrays`` in, reusing allocations when shapes match.
+    def fill(self, arrays: dict):
+        """Copy ``arrays`` (host or device) in, reusing allocations.
 
-        Returns (host arrays, reuses, allocs, bytes) — the caller folds
-        the counters into the shared stats under its own lock.
+        Returns (staged arrays, reuses, allocs, bytes) — the caller
+        folds the counters into the shared stats under its own lock.
+        Subclass hook: :class:`~repro.insitu.device.DeviceStagingArea`
+        swaps in a device-resident buffer set with the same contract.
         """
         out = {}
         reuses = allocs = nbytes = 0
-        for name, src in arrays.items():
+        for name, raw in arrays.items():
+            src = np.asarray(raw)          # device arrays land here once
             dst = self.buffers.get(name)
             if dst is not None and dst.shape == src.shape \
                     and dst.dtype == src.dtype:
@@ -113,6 +177,10 @@ class StagingStats:
 class StagingArea:
     """Bounded, policy-governed hand-off between compute and analysis."""
 
+    #: buffer-set factory — subclasses swap the staging residency
+    #: (``DeviceStagingArea`` keeps snapshots as jax device arrays)
+    BUFFER_SET: type = _BufferSet
+
     def __init__(self, *, capacity: int = 4, policy: str = "drop-oldest",
                  n_buffers: int | None = None, on_evict=None):
         assert policy in POLICIES, policy
@@ -126,15 +194,19 @@ class StagingArea:
         # enough sets for every queue slot + one being filled + one being
         # reduced per consumer; sized generously by the engine.
         self._free: list[_BufferSet] = [
-            _BufferSet() for _ in range(n_buffers or capacity + 2)]
+            self.BUFFER_SET() for _ in range(n_buffers or capacity + 2)]
         self._queue: list[Snapshot] = []
         self._lock = threading.Lock()
         self._not_empty = threading.Condition(self._lock)
         self._not_full = threading.Condition(self._lock)
         self._closed = False
-        self._stride = 1              # subsample decimation stride
-        self._slack = 0               # consecutive easy pushes (for decay)
+        self._ctrl = StrideController(capacity)   # subsample decimation
         self.stats = StagingStats()
+
+    @property
+    def stride(self) -> int:
+        """Current subsample decimation stride (1 = accept every step)."""
+        return self._ctrl.stride
 
     # -------------------------------------------------------------- push
     def push(self, step: int, arrays: dict, *, kind: str = "amr",
@@ -163,7 +235,8 @@ class StagingArea:
                 raise RuntimeError("staging area is closed")
             self.stats.pushed += 1
             if self.policy == "subsample":
-                if step % self._stride != 0:
+                stride = self._ctrl.observe(len(self._queue))
+                if step % stride != 0:
                     self.stats.dropped += 1
                     return False
             while len(self._queue) >= self.capacity or not self._free:
@@ -183,20 +256,14 @@ class StagingArea:
                 # subsample overflow (or drop-oldest with everything
                 # in-flight): reject the incoming snapshot
                 if self.policy == "subsample":
-                    self._stride = min(self._stride * 2, 1 << 16)
-                    self._slack = 0
+                    self._ctrl.overflow()
                 self.stats.dropped += 1
                 return False
-            if self.policy == "subsample":
-                self._slack += 1
-                if self._stride > 1 and self._slack * 2 > self.capacity:
-                    self._stride //= 2
-                    self._slack = 0
             bufset = self._free.pop()
-        # the (possibly large) device->host copy runs without the lock so
+        # the (possibly large) staging copy runs without the lock so
         # consumers keep popping/releasing; the buffer set is reserved
         try:
-            host, reuses, allocs, nbytes = bufset.fill(to_host(arrays))
+            host, reuses, allocs, nbytes = bufset.fill(arrays)
         except BaseException:
             with self._lock:       # failed copy must not leak the pool
                 self._free.append(bufset)
@@ -371,7 +438,8 @@ class ShmStagingArea:
 
     def __init__(self, *, capacity: int = 4, policy: str = "drop-oldest",
                  n_slots: int | None = None, on_evict=None,
-                 min_slot_bytes: int = 1 << 16, mp_context=None):
+                 min_slot_bytes: int = 1 << 16, mp_context=None,
+                 sync=None):
         from multiprocessing import shared_memory
         assert policy in POLICIES, policy
         assert capacity >= 1
@@ -382,21 +450,31 @@ class ShmStagingArea:
         n = n_slots or capacity + 2
         ctx = mp_context or multiprocessing.get_context("spawn")
         self._uid = f"hx{os.getpid():x}_{os.urandom(4).hex()}"
-        self._ctrl = shared_memory.SharedMemory(
+        self._shm = shared_memory.SharedMemory(
             create=True, size=(4 + 6 * n) * 8, name=f"{self._uid}ctl")
-        self._lock = ctx.Lock()
-        self._not_empty = ctx.Condition(self._lock)
-        self._not_full = ctx.Condition(self._lock)
-        self._bind(self._ctrl, n)
+        if sync is not None:
+            # externally owned primitives (the persistent lane pool:
+            # a pooled lane inherited them at spawn, long before this
+            # area existed — see insitu.lanes.LanePool)
+            self._lock, self._not_empty, self._not_full = sync
+        else:
+            self._lock = ctx.Lock()
+            self._not_empty = ctx.Condition(self._lock)
+            self._not_full = ctx.Condition(self._lock)
+        self._bind(self._shm, n)
         self._words[:] = 0
         self._words[3] = n
         #: producer-side segment cache: slot -> (gen, SharedMemory)
         self._segs: dict[int, tuple[int, object]] = {}
-        self._stride = 1
-        self._slack = 0
+        self._ctrl = StrideController(capacity)
         self.stats = StagingStats()
         self._consumer = False
         self._untrack = False
+
+    @property
+    def stride(self) -> int:
+        """Current subsample decimation stride (1 = accept every step)."""
+        return self._ctrl.stride
 
     def _bind(self, ctrl, n: int) -> None:
         self.n_slots = n
@@ -408,10 +486,33 @@ class ShmStagingArea:
     # ---------------------------------------------------------- handle
     def handle(self) -> ShmHandle:
         return ShmHandle(uid=self._uid, pid=os.getpid(),
-                         control=self._ctrl.name,
+                         control=self._shm.name,
                          n_slots=self.n_slots, capacity=self.capacity,
                          lock=self._lock, not_empty=self._not_empty,
                          not_full=self._not_full)
+
+    def spec(self) -> dict:
+        """Primitive-free attach spec (queue-transportable).
+
+        ``multiprocessing`` locks/conditions only pickle during process
+        *creation* — a handle sent over a queue to an already-running
+        pooled lane must not carry them. The lane rebuilds a full
+        :class:`ShmHandle` from this spec plus the sync primitives it
+        inherited at spawn (the same objects this area was constructed
+        with via ``sync=``; see ``insitu.lanes.LanePool``).
+        """
+        return {"uid": self._uid, "pid": os.getpid(),
+                "control": self._shm.name, "n_slots": self.n_slots,
+                "capacity": self.capacity}
+
+    @staticmethod
+    def handle_from_spec(spec: dict, sync) -> ShmHandle:
+        """Rebuild an attachable handle from :meth:`spec` + inherited sync."""
+        lock, not_empty, not_full = sync
+        return ShmHandle(uid=spec["uid"], pid=spec["pid"],
+                         control=spec["control"], n_slots=spec["n_slots"],
+                         capacity=spec["capacity"], lock=lock,
+                         not_empty=not_empty, not_full=not_full)
 
     @classmethod
     def attach(cls, handle: ShmHandle) -> "ShmStagingArea":
@@ -420,11 +521,11 @@ class ShmStagingArea:
         self._uid = handle.uid
         self.capacity = handle.capacity
         self._untrack = handle.pid != os.getpid()
-        self._ctrl = _attach_shm(handle.control, self._untrack)
+        self._shm = _attach_shm(handle.control, self._untrack)
         self._lock = handle.lock
         self._not_empty = handle.not_empty
         self._not_full = handle.not_full
-        self._bind(self._ctrl, handle.n_slots)
+        self._bind(self._shm, handle.n_slots)
         self._segs = {}
         self.on_evict = None
         self._consumer = True
@@ -471,7 +572,8 @@ class ShmStagingArea:
                 raise RuntimeError("staging area is closed")
             self.stats.pushed += 1
             if self.policy == "subsample":
-                if step % self._stride != 0:
+                stride = self._ctrl.observe(int(self._words[2]))
+                if step % stride != 0:
                     self.stats.dropped += 1
                     return False
             while True:
@@ -487,15 +589,9 @@ class ShmStagingArea:
                     self._evict_oldest(victims)
                     continue
                 if self.policy == "subsample":
-                    self._stride = min(self._stride * 2, 1 << 16)
-                    self._slack = 0
+                    self._ctrl.overflow()
                 self.stats.dropped += 1
                 return False
-            if self.policy == "subsample":
-                self._slack += 1
-                if self._stride > 1 and self._slack * 2 > self.capacity:
-                    self._stride //= 2
-                    self._slack = 0
             slot = int(free[0])
             self._state[slot] = _RESERVED
         # the (possibly large) copy into the slab runs without the lock
@@ -668,7 +764,7 @@ class ShmStagingArea:
         self._segs.clear()
         # drop numpy views before closing the mapping they alias
         self._words = self._ring = self._state = self._meta = None
-        self._close_seg(self._ctrl)
+        self._close_seg(self._shm)
 
     def unlink(self) -> None:
         """Owner side: reclaim every shared-memory segment.
@@ -683,5 +779,5 @@ class ShmStagingArea:
             seg.unlink()
         self._segs.clear()
         self._words = self._ring = self._state = self._meta = None
-        self._close_seg(self._ctrl)
-        self._ctrl.unlink()
+        self._close_seg(self._shm)
+        self._shm.unlink()

@@ -14,9 +14,10 @@ import jax
 import jax.numpy as jnp
 
 from ..core import bitstream as bs
-from . import bitpack_kernel, fpdelta_kernel, ref
+from . import bitpack_kernel, fpdelta_kernel, raster_kernel, ref
 
 BLOCK_G = fpdelta_kernel.DEFAULT_BLOCK_G
+BLOCK_N = raster_kernel.DEFAULT_BLOCK_N
 
 
 def default_backend() -> str:
@@ -151,6 +152,112 @@ def bitfield_unpack(words, n: int, *, backend: str | None = None) -> jnp.ndarray
     else:
         bits = bitpack_kernel.unpack(words, interpret=(backend == "pallas_interpret"))
     return bits.T.reshape(-1)[:n]
+
+
+# ------------------------------------------------------- AMR rasterization
+#
+# Device-reduction entry points (DESIGN.md §14): each takes flat BFS
+# node arrays — coords (N, 3) int, levels (N,) int, values (N,) float,
+# ok (N,) bool (leaf ∧ owner ∧ not-padding) — plus the reducer params,
+# and returns the reduced object with bits identical to the host numpy
+# reducers (``insitu.reducers``/``hercule.analysis``). ``resolution``
+# must be a power of two (the integer pixel-geometry fast path;
+# ``insitu.device`` falls back to host reducers otherwise). ``ref`` is
+# the fast vectorized CPU path, ``pallas``/``pallas_interpret`` run the
+# raster kernels.
+
+def _axes_uv(axis: int) -> tuple[int, int]:
+    ax_u, ax_v = (a for a in range(3) if a != axis)
+    return ax_u, ax_v
+
+
+def _pad_leaf(x, fill, block_n: int):
+    return _pad_lanes(x[None, :], block_n, fill)
+
+
+def _assert_pow2(resolution: int) -> None:
+    if resolution <= 0 or resolution & (resolution - 1):
+        raise ValueError(
+            f"raster kernels need a power-of-two resolution, got "
+            f"{resolution} (use the host reducer for arbitrary sizes)")
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "axis", "position", "resolution", "n_levels", "backend", "block_n"))
+def raster_slice(coords, levels, values, ok, *, axis: int, position: float,
+                 resolution: int, n_levels: int, backend: str | None = None,
+                 block_n: int = BLOCK_N):
+    """Axis-aligned slice image (deepest covering leaf, NaN elsewhere)."""
+    backend = _resolve(backend)
+    _assert_pow2(resolution)
+    ax_u, ax_v = _axes_uv(axis)
+    coords2 = jnp.stack([coords[:, ax_u], coords[:, ax_v]], 1
+                        ).astype(jnp.int32)
+    levels = levels.astype(jnp.int32)
+    if backend == "ref":
+        return ref.slice_raster_ref(
+            coords2, coords[:, axis], levels, values, ok,
+            position=position, resolution=resolution, n_levels=n_levels)
+    hit = raster_kernel.plane_hit(coords[:, axis], levels, position,
+                                  values.dtype)
+    u0, v0, px = raster_kernel.leaf_table(coords2, levels,
+                                          resolution=resolution)
+    good = (ok & hit).astype(jnp.int32)
+    return raster_kernel.slice_raster(
+        _pad_leaf(u0, 0, block_n), _pad_leaf(v0, 0, block_n),
+        _pad_leaf(px, 1, block_n), _pad_leaf(levels, 0, block_n),
+        _pad_leaf(values, 0, block_n), _pad_leaf(good, 0, block_n),
+        resolution=resolution, block_n=block_n,
+        interpret=(backend == "pallas_interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "axis", "resolution", "n_levels", "backend", "block_n"))
+def raster_projection(coords, levels, values, ok, *, axis: int,
+                      resolution: int, n_levels: int,
+                      backend: str | None = None, block_n: int = BLOCK_N):
+    """Column density: per-leaf value · path length summed along ``axis``."""
+    backend = _resolve(backend)
+    _assert_pow2(resolution)
+    ax_u, ax_v = _axes_uv(axis)
+    coords2 = jnp.stack([coords[:, ax_u], coords[:, ax_v]], 1
+                        ).astype(jnp.int32)
+    levels = levels.astype(jnp.int32)
+    if backend == "ref":
+        return ref.projection_raster_ref(
+            coords2, levels, values, ok, resolution=resolution,
+            n_levels=n_levels)
+    u0, v0, px = raster_kernel.leaf_table(coords2, levels,
+                                          resolution=resolution)
+    size = jnp.asarray(2.0, values.dtype) ** (-levels.astype(values.dtype))
+    contrib = values * size          # the host reducer's v[sel] * size
+    return raster_kernel.projection_raster(
+        _pad_leaf(u0, 0, block_n), _pad_leaf(v0, 0, block_n),
+        _pad_leaf(px, 1, block_n), _pad_leaf(contrib, 0, block_n),
+        _pad_leaf(ok.astype(jnp.int32), 0, block_n),
+        resolution=resolution, block_n=block_n,
+        interpret=(backend == "pallas_interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("n_levels", "backend",
+                                             "block_n"))
+def raster_level_hist(values, levels, ok, edges, *, n_levels: int,
+                      backend: str | None = None, block_n: int = BLOCK_N):
+    """(n_levels, bins) int64 per-level histogram over ``edges``."""
+    backend = _resolve(backend)
+    levels = levels.astype(jnp.int32)
+    if backend == "ref":
+        hist = ref.level_hist_ref(values, levels, ok, edges,
+                                  n_levels=n_levels)
+    else:
+        hist = raster_kernel.level_hist(
+            _pad_leaf(values, jnp.nan if values.dtype.kind == "f" else 0,
+                      block_n),
+            _pad_leaf(levels, 0, block_n),
+            _pad_leaf(ok.astype(jnp.int32), 0, block_n),
+            edges[None, :], n_levels=n_levels, bins=edges.shape[-1] - 1,
+            block_n=block_n, interpret=(backend == "pallas_interpret"))
+    return hist.astype(jnp.int64)
 
 
 # -------------------------------------------------------- f32 conveniences

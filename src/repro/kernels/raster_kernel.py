@@ -1,0 +1,239 @@
+"""Pallas TPU kernels for in-transit AMR rasterization (DESIGN.md §14).
+
+The three hot reducers of the in-situ flow — axis-aligned slice,
+projection (weighted axis sum) and per-level histogram — as on-device
+kernels, so device-resident staging (``insitu.device``) transfers only
+the *reduced* objects across the device→host boundary instead of the
+full snapshot.
+
+All three operate on a flat **leaf table** derived from the BFS tree
+arrays (``ops.py`` builds it): per-leaf pixel origin ``(u0, v0)``,
+rectangle size ``px``, level, value/contribution and a validity mask
+(leaf ∧ owned ∧ slice-plane hit ∧ not padding). Pixel math is pure
+integer arithmetic — the image resolution is required to be a power of
+two, so ``u0 = c << (k-l)`` (or ``>> (l-k)``) and ``px = max(1, R >>
+l)`` reproduce the host reducers' float ``floor``/``round`` results bit
+for bit; non-pow2 resolutions take the host fallback in
+``insitu.device``.
+
+Kernel shape: leaves ride the lane axis in ``(1, BLOCK_N)`` tables; the
+grid walks leaf blocks *sequentially* while the full output image (or
+histogram) stays resident in VMEM across grid steps (constant
+``index_map``, initialized on the first step). Inside a block the
+slice/projection kernels ``fori_loop`` over leaves, each iteration
+updating the output tile through a broadcast rectangle mask — masked
+``where`` updates, never scatter, so per-pixel update *order* equals
+the host reducers' BFS traversal and float accumulation is
+bit-identical, not just close. The histogram kernel is fully
+vectorized: a (BLOCK, B+1) edge-compare reproduces
+``np.searchsorted(edges, v, "right")`` and a (BLOCK, L·B) one-hot
+contraction is the blocked scatter-add (integer counts — order-free).
+
+Like the fpdelta kernels, every entry point takes ``interpret=`` so CPU
+CI exercises the exact kernel path (``backend="pallas_interpret"`` in
+``ops.py``); the pure-jnp twins in ``ref.py`` use vectorized per-level
+scatters instead (fast CPU path) and are bit-identical by the same
+ordering argument (XLA CPU applies scatter updates in order).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: leaves per grid step (lane-dim multiple of 128)
+DEFAULT_BLOCK_N = 512
+
+
+# ----------------------------------------------------------- leaf tables
+
+def leaf_table(coords, levels, *, resolution: int):
+    """Integer pixel geometry of every node: (u0, v0, px) per axis-pair.
+
+    ``coords`` is the (N, 2) slice-plane projection of the node coords
+    (caller drops the slice/projection axis); ``resolution`` must be a
+    power of two (asserted by ops.py). Exact integer forms of the host
+    reducers' ``floor(c * size * res)`` and ``round(size * res)``.
+    """
+    k = resolution.bit_length() - 1
+    lvl = levels.astype(jnp.int32)
+    up = jnp.maximum(k - lvl, 0)
+    dn = jnp.maximum(lvl - k, 0)
+    c = coords.astype(jnp.int32)
+    u0 = (c[:, 0] << up) >> dn
+    v0 = (c[:, 1] << up) >> dn
+    px = jnp.maximum(resolution >> jnp.minimum(lvl, 30), 1).astype(jnp.int32)
+    return u0, v0, px
+
+
+def plane_hit(coords_axis, levels, position: float, dtype):
+    """Host-exact slice-plane test: ``lo <= position < lo + size``.
+
+    Both bounds are exact dyadic rationals in float64 (c/2^l), so the
+    comparison reproduces ``analysis.slice_image`` bit for bit.
+    """
+    size = jnp.asarray(2.0, dtype) ** (-levels.astype(dtype))
+    lo = coords_axis.astype(dtype) * size
+    return (lo <= position) & (position < lo + size)
+
+
+# ------------------------------------------------------------ slice kernel
+
+def _slice_kernel(u0_ref, v0_ref, px_ref, lvl_ref, val_ref, ok_ref,
+                  img_ref, depth_ref, *, block_n: int, resolution: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        img_ref[...] = jnp.full((resolution, resolution), jnp.nan,
+                                img_ref.dtype)
+        depth_ref[...] = jnp.full((resolution, resolution), -1, jnp.int32)
+
+    rows = jax.lax.broadcasted_iota(jnp.int32, (resolution, resolution), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (resolution, resolution), 1)
+
+    def body(i, _):
+        u0, v0, px = u0_ref[0, i], v0_ref[0, i], px_ref[0, i]
+        lvl, val, ok = lvl_ref[0, i], val_ref[0, i], ok_ref[0, i]
+        rect = ((rows >= u0) & (rows < u0 + px)
+                & (cols >= v0) & (cols < v0 + px))
+        # deepest leaf wins; equal level repaints (leaves arrive in BFS
+        # order, so this is exactly the host painter's later-overrides)
+        mask = rect & (ok != 0) & (lvl >= depth_ref[...])
+        img_ref[...] = jnp.where(mask, val, img_ref[...])
+        depth_ref[...] = jnp.where(mask, lvl, depth_ref[...])
+        return 0
+
+    jax.lax.fori_loop(0, block_n, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("resolution", "block_n",
+                                             "interpret"))
+def slice_raster(u0, v0, px, lvl, val, ok, *, resolution: int,
+                 block_n: int = DEFAULT_BLOCK_N, interpret: bool = False):
+    """Rasterize the slice from a padded (1, N) leaf table.
+
+    ``ok`` already folds leaf/owner/plane-hit/padding; N must be a
+    multiple of ``block_n`` (ops.py pads). Returns the (R, R) image
+    (deepest-covering-leaf semantics, NaN where uncovered).
+    """
+    n = u0.shape[-1]
+    assert n % block_n == 0, f"N={n} not padded to {block_n}"
+    grid = (n // block_n,)
+    tbl = pl.BlockSpec((1, block_n), lambda i: (0, i))
+    out = pl.BlockSpec((resolution, resolution), lambda i: (0, 0))
+    img, _ = pl.pallas_call(
+        functools.partial(_slice_kernel, block_n=block_n,
+                          resolution=resolution),
+        grid=grid,
+        in_specs=[tbl] * 6,
+        out_specs=[out, out],
+        out_shape=[
+            jax.ShapeDtypeStruct((resolution, resolution), val.dtype),
+            jax.ShapeDtypeStruct((resolution, resolution), jnp.int32),
+        ],
+        interpret=interpret,
+    )(u0, v0, px, lvl, val, ok)
+    return img
+
+
+# ------------------------------------------------------- projection kernel
+
+def _proj_kernel(u0_ref, v0_ref, px_ref, contrib_ref, ok_ref, img_ref, *,
+                 block_n: int, resolution: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        img_ref[...] = jnp.zeros((resolution, resolution), img_ref.dtype)
+
+    rows = jax.lax.broadcasted_iota(jnp.int32, (resolution, resolution), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (resolution, resolution), 1)
+
+    def body(i, _):
+        u0, v0, px = u0_ref[0, i], v0_ref[0, i], px_ref[0, i]
+        contrib, ok = contrib_ref[0, i], ok_ref[0, i]
+        mask = ((rows >= u0) & (rows < u0 + px)
+                & (cols >= v0) & (cols < v0 + px) & (ok != 0))
+        # where-guarded add: pixels outside the rectangle are untouched
+        # (no +0.0), and per-pixel adds run in BFS leaf order — the same
+        # float accumulation sequence as the host reducer
+        img_ref[...] = jnp.where(mask, img_ref[...] + contrib, img_ref[...])
+        return 0
+
+    jax.lax.fori_loop(0, block_n, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("resolution", "block_n",
+                                             "interpret"))
+def projection_raster(u0, v0, px, contrib, ok, *, resolution: int,
+                      block_n: int = DEFAULT_BLOCK_N,
+                      interpret: bool = False):
+    """Column-density accumulation from a padded (1, N) leaf table.
+
+    ``contrib`` is the per-leaf field·path-length product (value ·
+    2^-level, computed upstream so the multiply matches the host path).
+    """
+    n = u0.shape[-1]
+    assert n % block_n == 0, f"N={n} not padded to {block_n}"
+    grid = (n // block_n,)
+    tbl = pl.BlockSpec((1, block_n), lambda i: (0, i))
+    out = pl.BlockSpec((resolution, resolution), lambda i: (0, 0))
+    return pl.pallas_call(
+        functools.partial(_proj_kernel, block_n=block_n,
+                          resolution=resolution),
+        grid=grid,
+        in_specs=[tbl] * 5,
+        out_specs=out,
+        out_shape=jax.ShapeDtypeStruct((resolution, resolution),
+                                       contrib.dtype),
+        interpret=interpret,
+    )(u0, v0, px, contrib, ok)
+
+
+# -------------------------------------------------------- histogram kernel
+
+def _hist_kernel(val_ref, lvl_ref, ok_ref, edges_ref, hist_ref, *,
+                 n_levels: int, bins: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros((n_levels, bins), jnp.int32)
+
+    v = val_ref[0, :]                       # (BLOCK,)
+    lvl = lvl_ref[0, :].astype(jnp.int32)
+    edges = edges_ref[0, :]                 # (bins + 1,)
+    # searchsorted(edges, v, side="right") == #edges <= v, vectorized as
+    # an edge-compare reduction (no in-kernel gather/scatter)
+    idx = jnp.sum((edges[:, None] <= v[None, :]).astype(jnp.int32),
+                  axis=0, dtype=jnp.int32) - 1
+    b = jnp.where(v == edges[-1], bins - 1, idx)    # top edge inclusive
+    good = ((ok_ref[0, :] != 0) & (v >= edges[0]) & (v <= edges[-1])
+            & (lvl >= 0) & (lvl < n_levels))
+    flat = jnp.where(good, lvl * bins + b, -1)      # (BLOCK,)
+    cells = jax.lax.broadcasted_iota(jnp.int32, (1, n_levels * bins), 1)
+    onehot = (flat[:, None] == cells).astype(jnp.int32)   # (BLOCK, L*B)
+    hist_ref[...] = hist_ref[...] + jnp.sum(
+        onehot, axis=0, dtype=jnp.int32).reshape(n_levels, bins)
+
+
+@functools.partial(jax.jit, static_argnames=("n_levels", "bins", "block_n",
+                                             "interpret"))
+def level_hist(val, lvl, ok, edges, *, n_levels: int, bins: int,
+               block_n: int = DEFAULT_BLOCK_N, interpret: bool = False):
+    """(L, B) per-level histogram via blocked one-hot scatter-add.
+
+    Bin assignment reproduces ``np.histogram(v, bins=edges)`` exactly
+    (right-open bins, top edge inclusive, out-of-range excluded);
+    integer counts make accumulation order-free.
+    """
+    n = val.shape[-1]
+    assert n % block_n == 0, f"N={n} not padded to {block_n}"
+    grid = (n // block_n,)
+    tbl = pl.BlockSpec((1, block_n), lambda i: (0, i))
+    return pl.pallas_call(
+        functools.partial(_hist_kernel, n_levels=n_levels, bins=bins),
+        grid=grid,
+        in_specs=[tbl, tbl, tbl,
+                  pl.BlockSpec((1, edges.shape[-1]), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((n_levels, bins), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_levels, bins), jnp.int32),
+        interpret=interpret,
+    )(val, lvl, ok, edges)

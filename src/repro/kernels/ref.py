@@ -62,3 +62,107 @@ def bitunpack_ref(words: jnp.ndarray) -> jnp.ndarray:
     """Inverse of :func:`bitpack_ref`: (W,) uint32 -> (32, W) {0,1}."""
     shifts = jnp.arange(32, dtype=jnp.uint32)[:, None]
     return ((words[None, :] >> shifts) & jnp.uint32(1)).astype(jnp.uint32)
+
+
+# ------------------------------------------------------ raster oracles
+#
+# Fast CPU twins of raster_kernel.py: vectorized per-level scatters
+# instead of the kernels' in-block leaf loop. Bit-identical to the host
+# numpy reducers (and to the kernels) by construction: levels are
+# processed ascending, per-pixel float updates keep the host's BFS leaf
+# order (XLA CPU applies scatter updates sequentially, like np.add.at),
+# coarse levels (cell rectangle >= 1 pixel) have unique cell->pixel
+# maps so their scatter collapses to one update per pixel, and all
+# pixel geometry is the same exact integer arithmetic. Invalid rows are
+# dumped into a trailing trash slot instead of masked gathers.
+
+def _level_pix(coords2, resolution: int, lvl: int):
+    """Flat full-res pixel index of each node at one level (px == 1)."""
+    k = resolution.bit_length() - 1
+    u0 = coords2[:, 0] >> (lvl - k) if lvl > k else coords2[:, 0] << (k - lvl)
+    v0 = coords2[:, 1] >> (lvl - k) if lvl > k else coords2[:, 1] << (k - lvl)
+    return u0 * resolution + v0
+
+
+def slice_raster_ref(coords2, c_axis, levels, values, ok, *,
+                     position: float, resolution: int, n_levels: int):
+    """Oracle for the slice kernel: deepest-covering-leaf painting.
+
+    ``coords2`` is the (N, 2) in-plane coords, ``c_axis`` the (N,) coord
+    along the slice axis. Resolution must be a power of two.
+    """
+    r = resolution
+    k = r.bit_length() - 1
+    img = jnp.full((r, r), jnp.nan, values.dtype)
+    for lvl in range(n_levels):
+        size = 1.0 / (1 << lvl)
+        lo = c_axis.astype(values.dtype) * size
+        sel = ok & (levels == lvl) & (lo <= position) & (position < lo + size)
+        if lvl <= k:
+            g, px = 1 << lvl, r >> lvl
+            idx = jnp.where(sel, coords2[:, 0] * g + coords2[:, 1], g * g)
+            coarse = jnp.full(g * g + 1, jnp.nan, values.dtype
+                              ).at[idx].set(values)
+            painted = jnp.zeros(g * g + 1, bool).at[idx].set(sel)
+            up_val = jnp.repeat(jnp.repeat(coarse[:-1].reshape(g, g),
+                                           px, 0), px, 1)
+            up_hit = jnp.repeat(jnp.repeat(painted[:-1].reshape(g, g),
+                                           px, 0), px, 1)
+            img = jnp.where(up_hit, up_val, img)
+        else:
+            idx = jnp.where(sel, _level_pix(coords2, r, lvl), r * r)
+            flat = jnp.concatenate(
+                [img.reshape(-1), jnp.zeros(1, values.dtype)])
+            img = flat.at[idx].set(values)[:-1].reshape(r, r)
+    return img
+
+
+def projection_raster_ref(coords2, levels, values, ok, *,
+                          resolution: int, n_levels: int):
+    """Oracle for the projection kernel: field * path-length column sum.
+
+    Unlike the slice, a projection collapses one axis: several leaves
+    of the *same* level can land on the same pixel (they differ along
+    the projection axis), so per-pixel adds must run leaf by leaf in
+    BFS order to match the host reducer's float accumulation. At coarse
+    levels (cell rectangle >= 1 pixel) the scatter-add therefore
+    targets a **coarse view** of the running image — exact, because all
+    earlier (coarser) levels wrote values constant over this level's
+    cells — and the result is replicated back; XLA CPU applies the
+    scatter's duplicate updates in order, like ``np.add.at``.
+    """
+    r = resolution
+    k = r.bit_length() - 1
+    img = jnp.zeros((r, r), values.dtype)
+    zero = jnp.zeros((), values.dtype)
+    for lvl in range(n_levels):
+        sel = ok & (levels == lvl)
+        contrib = values * jnp.asarray(1.0 / (1 << lvl), values.dtype)
+        if lvl <= k:
+            g, px = 1 << lvl, r >> lvl
+            idx = jnp.where(sel, coords2[:, 0] * g + coords2[:, 1], g * g)
+            flat = jnp.concatenate([img[::px, ::px].reshape(-1),
+                                    jnp.zeros(1, values.dtype)])
+            flat = flat.at[idx].add(jnp.where(sel, contrib, zero))
+            img = jnp.repeat(jnp.repeat(flat[:-1].reshape(g, g),
+                                        px, 0), px, 1)
+        else:
+            idx = jnp.where(sel, _level_pix(coords2, r, lvl), r * r)
+            flat = jnp.concatenate(
+                [img.reshape(-1), jnp.zeros(1, values.dtype)])
+            img = flat.at[idx].add(jnp.where(sel, contrib, zero)
+                                   )[:-1].reshape(r, r)
+    return img
+
+
+def level_hist_ref(values, levels, ok, edges, *, n_levels: int):
+    """Oracle for the histogram kernel (np.histogram bin semantics)."""
+    bins = edges.shape[-1] - 1
+    idx = jnp.searchsorted(edges, values, side="right") - 1
+    b = jnp.where(values == edges[-1], bins - 1, idx)
+    good = (ok & (values >= edges[0]) & (values <= edges[-1])
+            & (levels >= 0) & (levels < n_levels))
+    flat = jnp.where(good, levels * bins + b, n_levels * bins)
+    hist = jnp.zeros(n_levels * bins + 1, jnp.int32).at[flat].add(
+        good.astype(jnp.int32))
+    return hist[:-1].reshape(n_levels, bins)

@@ -43,7 +43,8 @@ def _make_demo_db(root: str, *, domains: int = 2, steps: int = 2) -> None:
     eng.close()
 
 
-def _selftest(root: str | None, compress: bool) -> int:
+def _selftest(root: str | None, compress: bool,
+              token: str | None = None) -> int:
     from ..insitu import Catalog, CatalogServer, RemoteCatalog
     tmp = None
     if root is None:
@@ -51,10 +52,22 @@ def _selftest(root: str | None, compress: bool) -> int:
         root = tmp
         print(f"== selftest: generating 2-domain in-transit db in {root}")
         _make_demo_db(root)
-    srv = CatalogServer(root, port=0, compress=compress).start()
+    token = token or "selftest-secret"
+    srv = CatalogServer(root, port=0, compress=compress,
+                        token=token).start()
     local = Catalog(root)
     try:
-        rc = RemoteCatalog(srv.url)
+        # auth: no/wrong token must bounce with 401 before touching data
+        for bad in (RemoteCatalog(srv.url),
+                    RemoteCatalog(srv.url, token="wrong")):
+            try:
+                bad.steps()
+            except PermissionError:
+                pass
+            else:
+                print("   FAIL: unauthenticated request was served")
+                return 1
+        rc = RemoteCatalog(srv.url, token=token)
         steps = rc.steps()
         print(f"== serving {srv.url}: steps={steps}")
         if steps != local.steps() or not steps:
@@ -73,9 +86,22 @@ def _selftest(root: str | None, compress: bool) -> int:
                 if rc.domains(s, reducer) != local.domains(s, reducer):
                     mismatched += 1
                     print(f"   MISMATCH domains step={s} {reducer}")
+        # ETag revalidation: a re-query of every object must 304 and
+        # serve from the client cache (zero payload bytes)
+        requeries = 0
+        for s in steps:
+            for reducer in local.reducers(s):
+                rc.query(s, reducer)
+                requeries += 1
+        cinfo = rc.client_cache_info()
+        if cinfo["etag_hits"] < requeries:
+            print(f"   FAIL: expected {requeries} ETag revalidation "
+                  f"hits, got {cinfo}")
+            return 1
         info = rc.cache_info()
         print(f"   {checked} arrays compared, {mismatched} mismatched; "
-              f"server cache: hits={info['hits']} misses={info['misses']}")
+              f"server cache: hits={info['hits']} misses={info['misses']}; "
+              f"client etag cache: {cinfo}")
         return 1 if mismatched or not checked else 0
     finally:
         srv.close()
@@ -95,22 +121,31 @@ def main(argv=None):
                    help="shared reduction-cache capacity")
     p.add_argument("--compress", action="store_true",
                    help="fpdelta-pyramid-encode large float payloads")
+    p.add_argument("--token", default=None,
+                   help="require 'Authorization: Bearer <token>' on every "
+                        "request (default: the HX_TOKEN environment "
+                        "variable; unset = no auth, localhost only)")
     p.add_argument("--selftest", action="store_true",
                    help="serve a demo db on an ephemeral port, verify "
-                        "RemoteCatalog == local Catalog, exit")
+                        "RemoteCatalog == local Catalog (incl. bearer "
+                        "auth and ETag revalidation), exit")
     args = p.parse_args(argv)
 
+    import os
+    token = args.token if args.token is not None \
+        else os.environ.get("HX_TOKEN") or None
     if args.selftest:
-        return _selftest(args.root, args.compress)
+        return _selftest(args.root, args.compress, token)
     if args.root is None:
         p.error("--root is required (or use --selftest)")
     from ..insitu import CatalogServer
     srv = CatalogServer(args.root, host=args.host, port=args.port,
                         cache_entries=args.cache_entries,
-                        compress=args.compress)
+                        compress=args.compress, token=token)
     print(f"catalog server on {srv.url} (root={args.root}, "
           f"cache={args.cache_entries} entries, "
-          f"compress={args.compress}) — Ctrl-C to stop")
+          f"compress={args.compress}, auth={'on' if token else 'off'}) "
+          f"— Ctrl-C to stop")
     try:
         srv.serve_forever()
     except KeyboardInterrupt:

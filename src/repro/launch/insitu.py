@@ -56,6 +56,13 @@ def main(argv=None):
                    choices=["thread", "process"],
                    help="lane runtime: in-process worker threads, or one "
                         "OS process per group over shared-memory staging")
+    p.add_argument("--device-reduce", action="store_true",
+                   help="stage snapshots on the accelerator and reduce "
+                        "with the Pallas raster kernels; only reduced "
+                        "objects cross the device->host boundary")
+    p.add_argument("--lane-pool", action="store_true",
+                   help="with --backend process: borrow lanes from the "
+                        "persistent module pool instead of spawning")
     p.add_argument("--queries", type=int, default=16,
                    help="viewer queries to replay against the catalog")
     p.add_argument("--serve-check", action="store_true",
@@ -69,11 +76,14 @@ def main(argv=None):
         args.out, reducers,
         output_every=args.output_every, workers=args.workers,
         queue_capacity=args.queue_capacity, policy=args.policy,
-        domains=args.domains, backend=args.backend).start()
+        domains=args.domains, backend=args.backend,
+        device_reduce=args.device_reduce,
+        lane_pool=args.lane_pool).start()
 
     print(f"== compute flow: {args.steps} Sedov steps "
           f"(policy={args.policy}, output_every={args.output_every}, "
-          f"domains={args.domains}, backend={args.backend})")
+          f"domains={args.domains}, backend={args.backend}, "
+          f"device_reduce={args.device_reduce})")
     t_compute = t_submit = 0.0
     for s in range(1, args.steps + 1):
         t0 = time.perf_counter()
@@ -98,7 +108,17 @@ def main(argv=None):
         print(f"   staging[g{g}]: accepted={stats.accepted} "
               f"evicted={stats.evicted} dropped={stats.dropped} "
               f"reuses={stats.buffer_reuses} allocs={stats.buffer_allocs}")
+    if args.device_reduce:
+        ds = engine.device_stats
+        staged = sum(a.stats.bytes_staged for a in engine.stages)
+        print(f"   device reduce: {ds['bytes_to_host']/1e6:.2f} MB to host "
+              f"vs {staged/1e6:.2f} MB staged on device "
+              f"({ds['device_objects']} device objects, "
+              f"fallback_runs={ds['fallback_runs']})")
     engine.close()
+    if args.lane_pool:
+        from ..insitu import shutdown_pool
+        shutdown_pool()       # reclaim the resident lanes before exit
 
     print("== analysis flow: catalog replay (domain-merged queries)")
     cat = Catalog(args.out)

@@ -43,6 +43,9 @@ def main(argv=None):
                    choices=["thread", "process"],
                    help="lane runtime: in-process worker threads, or one "
                         "OS process per group over shared-memory staging")
+    p.add_argument("--insitu-device-reduce", action="store_true",
+                   help="stage train-state snapshots on the accelerator "
+                        "(zero-copy) and transfer only reduced objects")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
@@ -61,6 +64,7 @@ def main(argv=None):
         insitu_policy=args.insitu_policy,
         insitu_domains=args.insitu_domains,
         insitu_backend=args.insitu_backend,
+        insitu_device_reduce=args.insitu_device_reduce,
         seed=args.seed)
     trainer.run(args.steps)
     return 0

@@ -59,7 +59,8 @@ class Trainer:
                  hdep_dir: str | None = None, hdep_every: int = 0,
                  insitu_dir: str | None = None, insitu_every: int = 0,
                  insitu_reducers=None, insitu_policy: str = "drop-oldest",
-                 insitu_domains: int = 1, insitu_backend: str = "thread"):
+                 insitu_domains: int = 1, insitu_backend: str = "thread",
+                 insitu_device_reduce: bool = False):
         self.lm = lm
         self.cfg = lm.cfg
         self.opt_cfg = opt_cfg or optim.OptConfig()
@@ -83,10 +84,14 @@ class Trainer:
             # backend="process" moves each contributor lane to its own
             # OS process over shared-memory staging: reductions and
             # domain writes stop competing with the train step's Python
+            # device_reduce stages the train-state leaves on the
+            # accelerator (zero-copy: they are already jax arrays) and
+            # only the reduced tensor summaries cross to the host
             self.insitu = InTransitEngine(
                 insitu_dir, reducers, output_every=insitu_every,
                 policy=insitu_policy, ncf=ncf, domains=insitu_domains,
-                backend=insitu_backend)
+                backend=insitu_backend,
+                device_reduce=insitu_device_reduce)
         self.monitor = StragglerMonitor()
         self.seed = seed
         self._stop = False

@@ -1,0 +1,260 @@
+"""On-accelerator reduction subsystem (DESIGN.md §14).
+
+Kernel parity is the acceptance criterion: for slice / projection /
+per-level histogram, ``pallas_interpret`` == ``ref`` == host-numpy
+reducer outputs, bit for bit, on random AMR trees — including
+owner-masked partitioned inputs. Plus device staging semantics
+(device-resident snapshots, push-copy safety, backpressure parity) and
+the end-to-end ``InTransitEngine(device_reduce=True)`` path (bit-equal
+catalogs, host fallback for unregistered reducers, transfer accounting).
+"""
+import numpy as np
+import pytest
+
+from repro.insitu import Catalog, InTransitEngine, partition_snapshot
+from repro.insitu.device import (DeviceDAGRunner, DeviceStagingArea,
+                                 device_impl_for)
+from repro.insitu.reducers import (LevelHistogramReducer, LODCutReducer,
+                                   ProjectionReducer, ReducerDAG,
+                                   SliceReducer)
+from repro.insitu.staging import Snapshot
+from repro.sim import amrgen, fields
+
+SEEDS = (0, 7)
+RESOLUTIONS = (16, 64)    # 16 < deepest level: exercises px==1 collisions
+
+
+def random_tree(seed: int):
+    """A Sedov AMR structure carrying random (sign-mixed) field values."""
+    rng = np.random.default_rng(seed)
+    tree = amrgen.generate_tree(fields.sedov(r_shock=0.2 + 0.1 * rng.random()),
+                                min_level=2, max_level=5, threshold=1.2)
+    tree.fields["density"] = rng.standard_normal(tree.n_nodes) * 4.0 + 1.0
+    return tree
+
+
+def host_outputs(snap, resolution):
+    dag = ReducerDAG([
+        SliceReducer(field="density", axis=2, position=0.5,
+                     resolution=resolution),
+        ProjectionReducer(field="density", axis=2, resolution=resolution),
+        LevelHistogramReducer(field="density", bins=32),
+    ])
+    return dag, dag.run(snap)
+
+
+def assert_tree_equal(a: dict, b: dict):
+    assert set(a) == set(b)
+    for k in a:
+        assert a[k].dtype == b[k].dtype, k
+        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+
+
+# ------------------------------------------------------------ kernel parity
+
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("resolution", RESOLUTIONS)
+def test_kernel_parity_single_domain(seed, resolution):
+    """pallas_interpret == ref == host reducers, bit for bit."""
+    tree = random_tree(seed)
+    snap = Snapshot(step=0, kind="amr", arrays=tree.to_arrays())
+    dag, host = host_outputs(snap, resolution)
+    for backend in ("ref", "pallas_interpret"):
+        runner = DeviceDAGRunner(dag, backend=backend)
+        dev = runner.run(snap)
+        assert not runner.stats.fallback_runs
+        for rname in host:
+            assert_tree_equal(host[rname], dev[rname])
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas_interpret"])
+def test_kernel_parity_owner_masked_partitions(backend):
+    """Partitioned inputs: owner-masked kernels match the host reducers
+    per contributor part (each owned leaf counted exactly once)."""
+    tree = random_tree(3)
+    parts = partition_snapshot(tree.to_arrays(), "amr", 3)
+    dag = ReducerDAG([
+        SliceReducer(field="density", axis=2, position=0.5, resolution=32),
+        ProjectionReducer(field="density", axis=2, resolution=32),
+        LevelHistogramReducer(field="density", bins=16, lo=-8.0, hi=8.0),
+    ])
+    runner = DeviceDAGRunner(dag, backend=backend)
+    for g, part in enumerate(parts):
+        snap = Snapshot(step=0, kind="amr", arrays=part, domain=g,
+                        n_domains=len(parts))
+        host = dag.run(snap)
+        dev = runner.run(snap)
+        for rname in host:
+            assert_tree_equal(host[rname], dev[rname])
+
+
+def test_device_impl_registry_fallback_configs():
+    """Unsupported configs resolve to None -> host fallback."""
+    assert device_impl_for(SliceReducer(resolution=64)) is not None
+    # non-power-of-two resolution: integer pixel geometry doesn't apply
+    assert device_impl_for(SliceReducer(resolution=100)) is None
+    # upstream source: the LOD cut runs on host
+    assert device_impl_for(
+        SliceReducer(resolution=64, source="lod2")) is None
+    assert device_impl_for(LODCutReducer(max_level=2)) is None
+    assert device_impl_for(ProjectionReducer(resolution=48)) is None
+    assert device_impl_for(LevelHistogramReducer()) is not None
+
+
+# ----------------------------------------------------------- device staging
+
+def test_device_staging_holds_jax_arrays_and_copies():
+    """Staged snapshots are device-resident; compute may mutate its host
+    arrays right after push (the upload is a real copy)."""
+    import jax
+    st = DeviceStagingArea(capacity=2)
+    a = np.arange(8.0)
+    assert st.push(1, {"a": a})
+    a[:] = -1.0
+    snap = st.pop(timeout=1.0)
+    assert isinstance(snap.arrays["a"], jax.Array)
+    assert snap.arrays["a"].dtype == np.float64   # x64 staging, no downcast
+    np.testing.assert_array_equal(np.asarray(snap.arrays["a"]),
+                                  np.arange(8.0))
+    st.release(snap)
+    st.close()
+
+
+def test_device_staging_survives_donated_device_arrays():
+    """A jax-array push restages device-side (counted as reuse) and the
+    staged copy survives deletion of the producer's buffer — the
+    trainer's train step *donates* its state, which deletes the
+    original while the snapshot is still queued."""
+    import jax.numpy as jnp
+    st = DeviceStagingArea(capacity=2)
+    x = jnp.arange(16.0)
+    assert st.push(1, {"x": x})
+    assert st.stats.buffer_reuses == 1      # device-resident: no upload
+    assert st.stats.buffer_allocs == 0
+    x.delete()                              # what donation does
+    snap = st.pop(timeout=1.0)
+    np.testing.assert_array_equal(np.asarray(snap.arrays["x"]),
+                                  np.arange(16.0))
+    st.release(snap)
+    st.close()
+
+
+def test_device_staging_drop_oldest_parity():
+    st = DeviceStagingArea(capacity=2, policy="drop-oldest")
+    for s in range(1, 6):
+        assert st.push(s, {"a": np.full(4, float(s))})
+    assert len(st) == 2
+    assert st.stats.evicted == 3
+    snaps = [st.pop(timeout=1.0), st.pop(timeout=1.0)]
+    assert [s.step for s in snaps] == [4, 5]
+    for s in snaps:
+        st.release(s)
+    st.close()
+
+
+# ------------------------------------------------------------- engine e2e
+
+def test_engine_device_reduce_bit_identical(tmp_path):
+    """device_reduce=True writes a catalog bit-identical to the host
+    path, transfers less than the full snapshot, and host-falls-back
+    only for the reducer without a device impl (the LOD cut)."""
+    tree = random_tree(11)
+    mk = lambda: [  # noqa: E731
+        SliceReducer(field="density", resolution=64),
+        ProjectionReducer(field="density", resolution=64),
+        LevelHistogramReducer(field="density", bins=16),
+        LODCutReducer(max_level=2),
+    ]
+    roots = {}
+    for mode in (False, True):
+        root = str(tmp_path / f"db_{mode}")
+        roots[mode] = root
+        eng = InTransitEngine(root, mk(), device_reduce=mode).start()
+        for s in (1, 2):
+            assert eng.submit(s, tree)
+        eng.close()
+        if mode:
+            ds = eng.device_stats
+            assert ds["snapshots"] == 2
+            assert set(ds["fallback_runs"]) == {"lod2"}
+            assert 0 < ds["bytes_to_host"]
+        else:
+            assert eng.device_stats is None
+    ch, cd = Catalog(roots[False]), Catalog(roots[True])
+    for s in (1, 2):
+        assert ch.reducers(s) == cd.reducers(s)
+        for r in ch.reducers(s):
+            assert_tree_equal(ch.query(s, r), cd.query(s, r))
+    ch.close()
+    cd.close()
+
+
+def test_engine_device_reduce_transfer_savings(tmp_path):
+    """Without host-fallback reducers, device->host traffic is a small
+    fraction of the staged snapshot bytes (the subsystem's raison
+    d'etre)."""
+    tree = amrgen.generate_tree(fields.sedov(), min_level=3, max_level=6,
+                                threshold=1.1)
+    eng = InTransitEngine(str(tmp_path / "db"), [
+        SliceReducer(field="density", resolution=32),
+        ProjectionReducer(field="density", resolution=32),
+        LevelHistogramReducer(field="density", bins=16, lo=-8.0, hi=8.0),
+    ], device_reduce=True).start()
+    assert eng.submit(1, tree)
+    eng.close()
+    ds = eng.device_stats
+    staged = sum(a.stats.bytes_staged for a in eng.stages)
+    assert ds["fallback_snapshots"] == 0
+    assert ds["bytes_to_host"] < staged / 4
+    assert Catalog(str(tmp_path / "db")).steps() == [1]
+
+
+def test_engine_device_reduce_multidomain_merge(tmp_path):
+    """device_reduce composes with contributor groups: per-domain device
+    parts are bit-identical to the host multi-domain path, and the
+    merged answers agree with the single-domain reference."""
+    tree = random_tree(9)
+    mk = lambda: [  # noqa: E731
+        ProjectionReducer(field="density", resolution=32),
+        LevelHistogramReducer(field="density", bins=16, lo=-8.0, hi=8.0),
+    ]
+    roots = {}
+    for name, domains, dev in (("ref", 1, True), ("md_host", 2, False),
+                               ("md_dev", 2, True)):
+        roots[name] = str(tmp_path / name)
+        eng = InTransitEngine(roots[name], mk(), domains=domains,
+                              device_reduce=dev).start()
+        assert eng.submit(1, tree)
+        eng.close()
+    ref = Catalog(roots["ref"])
+    md_host = Catalog(roots["md_host"])
+    md_dev = Catalog(roots["md_dev"])
+    pname, hname = "proj-density-ax2-r32", "hist-density-b16-lo-8-hi8"
+    assert md_dev.domains(1, pname) == [0, 1]
+    # device multi-domain == host multi-domain, bit for bit (merged and
+    # per domain)
+    for reducer in (pname, hname):
+        assert_tree_equal(md_host.query(1, reducer),
+                          md_dev.query(1, reducer))
+        for d in (0, 1):
+            assert_tree_equal(md_host.query(1, reducer, domain=d),
+                              md_dev.query(1, reducer, domain=d))
+    # and the merged answers recover the single-domain reference: the
+    # projection to fp roundoff (sum-merge reorders adds), histogram
+    # counts exactly (padded rows aside, every leaf counted once)
+    a = ref.query(1, pname)["image"]
+    b = md_dev.query(1, pname)["image"]
+    np.testing.assert_allclose(a, b, rtol=1e-12, atol=1e-12)
+    ha, hb = ref.query(1, hname)["hist"], md_dev.query(1, hname)["hist"]
+    assert ha.sum() == hb.sum()
+    rows = min(ha.shape[0], hb.shape[0])
+    np.testing.assert_array_equal(ha[:rows], hb[:rows])
+    for cat in (ref, md_host, md_dev):
+        cat.close()
+
+
+def test_engine_device_reduce_rejects_process_backend(tmp_path):
+    with pytest.raises(ValueError, match="thread"):
+        InTransitEngine(str(tmp_path / "db"),
+                        [SliceReducer(resolution=32)],
+                        device_reduce=True, backend="process")

@@ -70,6 +70,29 @@ def test_staging_subsample_decimates_under_pressure():
     st.close()
 
 
+def test_subsample_stride_converges_under_constant_load():
+    """PID stride control: under a constant consumer service ratio the
+    stride locks onto that ratio instead of hunting between extremes
+    (the old halve-on-slack heuristic oscillated by design)."""
+    for k in (3, 6, 12):     # consumer drains one snapshot every k pushes
+        st = StagingArea(capacity=4, policy="subsample")
+        strides = []
+        for step in range(2400):
+            st.push(step, {"a": np.zeros(8)})
+            if step % k == 0:
+                snap = st.pop(timeout=0)
+                if snap is not None:
+                    st.release(snap)
+            strides.append(st.stride)
+        tail = strides[-400:]
+        # converged: the tail sits in a tight band around the service
+        # ratio (quantization allows a one-step limit cycle)
+        assert min(tail) >= max(1, k // 2), (k, sorted(set(tail)))
+        assert max(tail) <= 2 * k, (k, sorted(set(tail)))
+        assert len(set(tail)) <= 2, (k, sorted(set(tail)))
+        st.close()
+
+
 def test_staging_double_buffer_reuse():
     st = StagingArea(capacity=1, policy="drop-oldest")
     for s in range(10):

@@ -157,7 +157,7 @@ def test_shm_slab_reclamation_on_release_and_close():
     # close() + unlink() reclaim every named segment
     names = [area._data_name(slot, gen)
              for slot, (gen, _) in area._segs.items()]
-    names.append(area._ctrl.name)
+    names.append(area._shm.name)
     area.close()
     assert consumer.pop(timeout=0.5) is None and consumer.closed
     consumer.detach()
@@ -291,9 +291,15 @@ def test_remote_catalog_round_trip(tmp_path, sedov_tree):
         assert all(np.array_equal(a, b, equal_nan=True)
                    for a, b in zip(vals, lvals))
 
-        # many viewers, one cache: the second identical query is a hit
-        before = rc.cache_info()
+        # many viewers, one cache: this viewer's repeated query now
+        # revalidates client-side (304, zero payload)...
+        before_etag = rc.client_cache_info()["etag_hits"]
         rc.query(3, slicer)
+        assert rc.client_cache_info()["etag_hits"] > before_etag
+        # ...while a *fresh* viewer (empty ETag cache) still shares the
+        # server's LRU reduction cache
+        before = rc.cache_info()
+        RemoteCatalog(srv.url).query(3, slicer)
         after = rc.cache_info()
         assert after["hits"] > before["hits"]
 
@@ -338,3 +344,127 @@ def test_drain_timeout_still_raises(tmp_path):
     assert eng.submit_part(1, 1, parts[1])
     eng.close()
     assert eng.written_steps == [1]
+
+
+# --------------------------------------------------- persistent lane pool
+
+def test_lane_pool_reuses_spawned_lanes(tmp_path, sedov_tree):
+    """lane_pool=True: a second engine borrows the first engine's lane
+    processes (same PIDs) instead of paying spawn+import again, and the
+    reduced catalogs come out correct both times."""
+    from repro.insitu import shutdown_pool
+    from repro.insitu.lanes import LANE_POOL
+    pids = []
+    try:
+        for i in range(2):
+            root = str(tmp_path / f"db{i}")
+            eng = InTransitEngine(root, _reducers(), domains=2,
+                                  backend="process", lane_pool=True,
+                                  ncf=1).start()
+            assert eng.submit(1, sedov_tree)
+            eng.close()
+            pids.append(tuple(p.pid for p in eng._backend._procs))
+            cat = Catalog(root)
+            assert cat.steps() == [1]
+            assert cat.domains(1, _reducers()[2].name) == [0, 1]
+            cat.close()
+        assert pids[0] == pids[1]           # lanes actually reused
+        assert 2 in LANE_POOL._free and LANE_POOL._free[2]
+    finally:
+        shutdown_pool()
+    assert not LANE_POOL._free
+
+
+# ------------------------------------------------- server auth + ETag
+
+def _insitu_db(tmp_path, sedov_tree):
+    root = str(tmp_path / "srvdb")
+    eng = InTransitEngine(root, _reducers(), domains=2).start()
+    for s in (1, 2):
+        eng.submit(s, sedov_tree)
+    eng.close()
+    return root
+
+
+def test_server_bearer_token_auth(tmp_path, sedov_tree):
+    """--token mode: requests without the exact bearer token get 401
+    (PermissionError client-side); the right token is served normally."""
+    root = _insitu_db(tmp_path, sedov_tree)
+    srv = CatalogServer(root, port=0, token="s3cret").start()
+    try:
+        with pytest.raises(PermissionError):
+            RemoteCatalog(srv.url).steps()
+        with pytest.raises(PermissionError):
+            RemoteCatalog(srv.url, token="wrong").steps()
+        rc = RemoteCatalog(srv.url, token="s3cret")
+        assert rc.steps() == [1, 2]
+        assert rc.query(1, _reducers()[2].name)["image"].shape == (48, 48)
+    finally:
+        srv.close()
+
+
+def test_remote_catalog_etag_cache(tmp_path, sedov_tree):
+    """Hot viewers skip the transfer: a repeated query revalidates via
+    If-None-Match, gets a 304, and serves the cached arrays."""
+    root = _insitu_db(tmp_path, sedov_tree)
+    srv = CatalogServer(root, port=0).start()
+    try:
+        rc = RemoteCatalog(srv.url)
+        name = _reducers()[2].name
+        first = rc.query(1, name)
+        assert rc.client_cache_info() == {"entries": 1, "etag_hits": 0,
+                                          "etag_misses": 1}
+        again = rc.query(1, name)
+        info = rc.client_cache_info()
+        assert info["etag_hits"] == 1 and info["etag_misses"] == 1
+        np.testing.assert_array_equal(first["image"], again["image"])
+        # cached arrays are frozen like the local catalog's
+        with pytest.raises(ValueError):
+            again["image"][0, 0] = 1.0
+        # distinct (region/domain) keys are separate cache entries
+        crop = rc.query(1, name, region=((0, 8), (0, 8)))
+        assert crop["image"].shape == (8, 8)
+        dom = rc.query(1, name, domain=0)
+        assert rc.client_cache_info()["entries"] == 3
+        np.testing.assert_array_equal(crop["image"], first["image"][:8, :8])
+        # and revalidation still matches a fresh unconditional fetch
+        fresh = RemoteCatalog(srv.url).query(1, name, domain=0)
+        np.testing.assert_array_equal(dom["image"], fresh["image"])
+    finally:
+        srv.close()
+
+
+def test_etag_rotates_and_cache_invalidates_on_context_rewrite(tmp_path,
+                                                               sedov_tree):
+    """A rewritten context (engine resubmission) must rotate the ETag
+    AND drop the server's cached bytes — a fresh validator stamped onto
+    stale LRU content would poison every client forever."""
+    from repro.hercule import api
+    from repro.hercule.database import HerculeDB
+    root = str(tmp_path / "db")
+    db = HerculeDB.create(root, kind="hdep", ncf=1)
+    ctx = db.begin_context(1)
+    api.write_object(ctx, "reduced", 0, {"x": np.zeros(8)}, reducer="red")
+    ctx.finalize(attrs={"insitu": {"reducers": ["red"], "merge": {},
+                                   "n_domains": 1, "domains": [0]}})
+    srv = CatalogServer(root, port=0).start()
+    try:
+        rc = RemoteCatalog(srv.url)
+        np.testing.assert_array_equal(rc.query(1, "red")["x"], np.zeros(8))
+        # rewrite step 1 with different bytes (and a changed manifest)
+        time.sleep(0.01)          # ensure a distinct mtime_ns
+        ctx = db.begin_context(1)
+        api.write_object(ctx, "reduced", 0, {"x": np.ones(8)},
+                         reducer="red")
+        ctx.finalize(attrs={"insitu": {"reducers": ["red"], "merge": {},
+                                       "n_domains": 1, "domains": [0]}})
+        # revalidation must MISS (rotated tag) and serve the new bytes
+        out = rc.query(1, "red")["x"]
+        np.testing.assert_array_equal(out, np.ones(8))
+        assert rc.client_cache_info()["etag_misses"] == 2
+        # and the fresh tag now revalidates to the fresh bytes
+        np.testing.assert_array_equal(rc.query(1, "red")["x"], np.ones(8))
+        assert rc.client_cache_info()["etag_hits"] == 1
+    finally:
+        srv.close()
+        db.close()
