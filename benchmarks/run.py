@@ -23,6 +23,11 @@ from . import common
 #: module name -> minimum acceptable ``run()`` return value
 FLOORS = {"bench_api": 5.0}
 
+#: record name -> maximum acceptable emitted value (checked when the
+#: record exists; an absent record means its module was deselected or
+#: already failed with a traceback)
+CEILINGS = {"insitu.obs_overhead_pct": 2.0}
+
 
 def _modules():
     from . import (bench_api, bench_boolcodec, bench_checkpoint,
@@ -75,6 +80,18 @@ def main(argv=None) -> int:
             if not ok:
                 failures.append(f"{name}<floor {floor}")
 
+    ceilings = {}
+    by_name = {r["name"]: r for r in common.RECORDS}
+    for rname, cap in CEILINGS.items():
+        rec = by_name.get(rname)
+        if rec is None:
+            continue
+        ok = float(rec["value"]) <= cap
+        ceilings[rname] = {"ceiling": cap, "value": float(rec["value"]),
+                           "ok": ok}
+        if not ok:
+            failures.append(f"{rname}>ceiling {cap}")
+
     if args.json:
         payload = {
             "schema": "bench-record/v1",
@@ -82,6 +99,7 @@ def main(argv=None) -> int:
             "platform": platform.platform(),
             "records": common.RECORDS,
             "floors": floors,
+            "ceilings": ceilings,
             "failures": failures,
         }
         with open(args.json, "w") as f:

@@ -15,11 +15,13 @@ from __future__ import annotations
 
 import collections
 import threading
+import time
 
 import numpy as np
 
 from ..hercule import api
 from ..hercule.database import HerculeDB
+from ..obs import metrics as obs_metrics
 
 Region = tuple[tuple[int, int], ...]
 
@@ -42,6 +44,15 @@ def _crop(arrays: dict[str, np.ndarray], region: Region
     return out
 
 
+def _hist_digest(h) -> dict:
+    """Compact JSON-able digest of one histogram (no NaN quantiles)."""
+    _, total, n = h.merged()
+    out = {"count": n, "sum": total}
+    if n:
+        out.update(h.quantiles())
+    return out
+
+
 class Catalog:
     """Read-side view of an in-transit HDep database."""
 
@@ -54,6 +65,13 @@ class Catalog:
         self.io_reads = 0      # records decoded from the database files
         self.cache_hits = 0
         self.cache_misses = 0
+        #: private registry: two catalogs in one process never collide
+        self.obs = obs_metrics.MetricsRegistry()
+        self._h_query = self.obs.histogram(
+            "catalog_query_seconds",
+            "query() latency split by cache outcome", labels=("result",))
+        self._h_series = self.obs.histogram(
+            "catalog_series_seconds", "series() end-to-end latency")
 
     # ------------------------------------------------------------ discovery
     def steps(self) -> list[int]:
@@ -97,6 +115,7 @@ class Catalog:
         stale. The full (merged) object is what gets cached; region crops
         are views of the cached arrays.
         """
+        t0 = time.perf_counter() if obs_metrics.ENABLED else 0.0
         region = _normalize_region(region)
         key = (step, reducer, domain)
         with self._lock:
@@ -104,6 +123,7 @@ class Catalog:
             if full is not None:
                 self._cache.move_to_end(key)
                 self.cache_hits += 1
+        hit = full is not None
         if full is None:
             full = api.read_object(self.db, step, "reduced", domain,
                                    reducer=reducer)
@@ -119,6 +139,9 @@ class Catalog:
                 self._cache.move_to_end(key)
                 while len(self._cache) > self.cache_entries:
                     self._cache.popitem(last=False)
+        if obs_metrics.ENABLED:
+            self._h_query.labels("hit" if hit else "miss").observe(
+                time.perf_counter() - t0)
         if region is None:
             return dict(full)
         return _crop(full, region)
@@ -134,6 +157,7 @@ class Catalog:
         ``reducer``/``name`` are compared as exact strings — glob
         characters in them are literal.
         """
+        t0 = time.perf_counter() if obs_metrics.ENABLED else 0.0
         target = f"reduced/{reducer}/{name}"
         sel = api.Selector(steps=steps, kinds="reduced")
         out_steps, vals = [], []
@@ -142,6 +166,8 @@ class Catalog:
                 continue
             out_steps.append(ref.step)
             vals.append(self.query(ref.step, reducer)[name])
+        if obs_metrics.ENABLED:
+            self._h_series.observe(time.perf_counter() - t0)
         return np.asarray(out_steps, np.int64), vals
 
     # ----------------------------------------------------------------- admin
@@ -160,9 +186,21 @@ class Catalog:
         self.db._invalidate_view(step)
 
     def cache_info(self) -> dict:
+        """Cache counters plus a compact query/series latency summary.
+
+        The four counter keys are stable API; ``timing`` carries
+        histogram digests (count/sum + interpolated quantiles, NaN-free
+        so the dict JSON-serializes strictly).
+        """
         with self._lock:
-            return {"entries": len(self._cache), "hits": self.cache_hits,
+            info = {"entries": len(self._cache), "hits": self.cache_hits,
                     "misses": self.cache_misses, "io_reads": self.io_reads}
+        info["timing"] = {
+            "query_hit": _hist_digest(self._h_query.labels("hit")),
+            "query_miss": _hist_digest(self._h_query.labels("miss")),
+            "series": _hist_digest(self._h_series),
+        }
+        return info
 
     def clear_cache(self) -> None:
         with self._lock:

@@ -43,6 +43,7 @@ import threading
 
 import numpy as np
 
+from ..obs.trace import TRACER
 from .reducers import (LevelHistogramReducer, ProjectionReducer,
                        ReducerDAG, SliceReducer)
 from .staging import Snapshot, StagingArea
@@ -339,11 +340,16 @@ class DeviceDAGRunner:
                                         backend=self.backend)
                     moved = 0
                     out = {}
-                    for k, v in impl(dt).items():
-                        if isinstance(v, jax.Array):
-                            moved += v.nbytes
-                            v = np.asarray(v)
-                        out[k] = v
+                    # spans nest under the lane's open "reduce" span;
+                    # np.asarray is where the async device work lands
+                    with TRACER.span("device.transfer",
+                                     args={"reducer": r.name}) as sp:
+                        for k, v in impl(dt).items():
+                            if isinstance(v, jax.Array):
+                                moved += v.nbytes
+                                v = np.asarray(v)
+                            out[k] = v
+                        sp.set(nbytes=moved)
                     with self._lock:
                         self.stats.device_objects += 1
                         self.stats.bytes_reduced_to_host += moved
@@ -359,10 +365,14 @@ class DeviceDAGRunner:
                 else:
                     if host_snap is None:
                         host_arrays, moved = {}, 0
-                        for k, v in snap.arrays.items():
-                            if isinstance(v, jax.Array):
-                                moved += v.nbytes
-                            host_arrays[k] = np.asarray(v)
+                        with TRACER.span("device.transfer",
+                                         args={"reducer": r.name,
+                                               "fallback": True}) as sp:
+                            for k, v in snap.arrays.items():
+                                if isinstance(v, jax.Array):
+                                    moved += v.nbytes
+                                host_arrays[k] = np.asarray(v)
+                            sp.set(nbytes=moved)
                         host_snap = Snapshot(
                             step=snap.step, kind=snap.kind,
                             arrays=host_arrays, meta=snap.meta,

@@ -45,6 +45,8 @@ import time
 from ..core.amr import AMRTree
 from ..hercule import api
 from ..hercule.database import HerculeDB
+from ..obs import metrics as obs_metrics
+from ..obs.trace import TRACER
 from .lanes import make_backend
 from .partition import partition_snapshot
 from .reducers import Reducer, ReducerDAG
@@ -63,6 +65,7 @@ class _PendingStep:
     finalizing: bool = False          # countdown done, manifest pending
     touched: float = 0.0              # monotonic time of last activity
     writers: int = 0                  # lanes mid-write into ctx (TTL gate)
+    trace: dict | None = None         # submit-span wire context (tracing)
 
 
 class InTransitEngine:
@@ -133,6 +136,21 @@ class InTransitEngine:
         #: group 0 for the single-group API the compute side always had
         self.stages = self._backend.stages
         self.staging = self.stages[0]
+        #: per-engine metrics registry (engine instances never collide);
+        #: hot-path observes are gated on obs.metrics.ENABLED, callback
+        #: gauges sync the passive counters at collect time
+        self.obs = obs_metrics.MetricsRegistry()
+        self._h_submit = self.obs.histogram(
+            "insitu_submit_seconds", "producer-side submit latency")
+        self._h_reduce = self.obs.histogram(
+            "insitu_reduce_seconds", "lane reducer-DAG latency",
+            labels=("group",))
+        self._h_write = self.obs.histogram(
+            "insitu_write_seconds", "domain write latency",
+            labels=("group",))
+        self._h_commit = self.obs.histogram(
+            "insitu_commit_seconds", "manifest commit latency")
+        self.obs.register_callback(self._sync_obs)
 
     @property
     def backend(self) -> str:
@@ -161,11 +179,17 @@ class InTransitEngine:
         if step % self.output_every != 0:
             return False
         self._sweep_ttl()
-        if isinstance(payload, AMRTree):
-            payload = payload.to_arrays()
-            kind = "amr"
-        parts = partition_snapshot(payload, kind, self.n_domains)
-        return self._stage_parts(step, parts, kind, meta)
+        t0 = time.perf_counter() if obs_metrics.ENABLED else 0.0
+        with TRACER.span("submit", args={"step": step}) as sp:
+            if isinstance(payload, AMRTree):
+                payload = payload.to_arrays()
+                kind = "amr"
+            parts = partition_snapshot(payload, kind, self.n_domains)
+            staged = self._stage_parts(step, parts, kind, meta,
+                                       trace=sp.context())
+        if obs_metrics.ENABLED:
+            self._h_submit.observe(time.perf_counter() - t0)
+        return staged
 
     def submit_parts(self, step: int, parts, *, kind: str = "amr",
                      meta: dict | None = None) -> bool:
@@ -188,9 +212,15 @@ class InTransitEngine:
                 f"got {len(parts)} parts for {self.n_domains} contributor "
                 f"group(s)")
         self._sweep_ttl()
-        parts = [p.to_arrays() if isinstance(p, AMRTree) else p
-                 for p in parts]
-        return self._stage_parts(step, parts, kind, meta)
+        t0 = time.perf_counter() if obs_metrics.ENABLED else 0.0
+        with TRACER.span("submit", args={"step": step}) as sp:
+            parts = [p.to_arrays() if isinstance(p, AMRTree) else p
+                     for p in parts]
+            staged = self._stage_parts(step, parts, kind, meta,
+                                       trace=sp.context())
+        if obs_metrics.ENABLED:
+            self._h_submit.observe(time.perf_counter() - t0)
+        return staged
 
     def submit_part(self, step: int, domain: int, payload, *,
                     kind: str = "amr", meta: dict | None = None) -> bool:
@@ -217,32 +247,44 @@ class InTransitEngine:
             raise ValueError(f"domain {domain} outside the engine's "
                              f"{self.n_domains} contributor group(s)")
         self._sweep_ttl()
-        if isinstance(payload, AMRTree):
-            payload = payload.to_arrays()
-        with self._wlock:
-            pend = self._pending.get(step)
-            if (pend is not None and pend.finalizing) or \
-                    (pend is None and step in self._committed):
-                # the step's context already committed (or is committing)
-                # — e.g. a TTL-finalized partial. A lone late part must
-                # not start a fresh countdown: it could only ever hold
-                # its own domain, and committing that would *overwrite*
-                # the manifest that carries the other survivors.
-                return False
-            if pend is None:
-                self._pending[step] = _PendingStep(
-                    remaining=self.n_domains, touched=time.monotonic())
-            else:
-                pend.touched = time.monotonic()
-        ok = self.stages[domain].push(step, payload, kind=kind, meta=meta,
-                                      domain=domain,
-                                      n_domains=self.n_domains)
+        t0 = time.perf_counter() if obs_metrics.ENABLED else 0.0
+        with TRACER.span("submit",
+                         args={"step": step, "domain": domain}) as sp:
+            tctx = sp.context()
+            if isinstance(payload, AMRTree):
+                payload = payload.to_arrays()
+            with self._wlock:
+                pend = self._pending.get(step)
+                if (pend is not None and pend.finalizing) or \
+                        (pend is None and step in self._committed):
+                    # the step's context already committed (or is
+                    # committing) — e.g. a TTL-finalized partial. A lone
+                    # late part must not start a fresh countdown: it
+                    # could only ever hold its own domain, and committing
+                    # that would *overwrite* the manifest that carries
+                    # the other survivors.
+                    return False
+                if pend is None:
+                    self._pending[step] = _PendingStep(
+                        remaining=self.n_domains, touched=time.monotonic(),
+                        trace=tctx)
+                else:
+                    pend.touched = time.monotonic()
+            if tctx is not None:
+                meta = {**(meta or {}), "_trace": tctx}
+            with TRACER.span("stage.push", args={"step": step,
+                                                 "group": domain}):
+                ok = self.stages[domain].push(
+                    step, payload, kind=kind, meta=meta, domain=domain,
+                    n_domains=self.n_domains)
+        if obs_metrics.ENABLED:
+            self._h_submit.observe(time.perf_counter() - t0)
         if not ok:
             self._part_done(step, None, None, defer_finalize=True)
         return ok
 
     def _stage_parts(self, step: int, parts, kind: str,
-                     meta: dict | None) -> bool:
+                     meta: dict | None, trace: dict | None = None) -> bool:
         # register before the first push: a fast worker lane may finish
         # its part while later parts are still being staged
         with self._wlock:
@@ -253,14 +295,22 @@ class InTransitEngine:
                 # ContextWriter — never append to a mid-serialization
                 # manifest); the stale entry pops itself by identity
                 self._pending[step] = _PendingStep(
-                    remaining=len(parts), touched=time.monotonic())
+                    remaining=len(parts), touched=time.monotonic(),
+                    trace=trace)
             else:                      # resubmitted step: extend the countdown
                 pend.remaining += len(parts)
                 pend.touched = time.monotonic()
+        if trace is not None:
+            # the submit span rides the snapshot meta across the lane
+            # boundary (shm JSON header), so lane-side spans link to it
+            meta = {**(meta or {}), "_trace": trace}
         staged_any = False
         for g, part in enumerate(parts):
-            ok = self.stages[g].push(step, part, kind=kind, meta=meta,
-                                     domain=g, n_domains=self.n_domains)
+            with TRACER.span("stage.push", args={"step": step,
+                                                 "group": g}):
+                ok = self.stages[g].push(step, part, kind=kind, meta=meta,
+                                         domain=g,
+                                         n_domains=self.n_domains)
             if ok:
                 staged_any = True
             else:
@@ -296,8 +346,16 @@ class InTransitEngine:
 
     def _reduce_and_write(self, snap: Snapshot):
         """Thread-backend execution of one part (in the engine process)."""
-        outputs = self._device.run(snap) if self._device is not None \
-            else self.dag.run(snap)
+        obs_on = obs_metrics.ENABLED
+        tctx = snap.meta.get("_trace")
+        t0 = time.perf_counter() if obs_on else 0.0
+        with TRACER.span("reduce", parent=tctx,
+                         args={"step": snap.step, "group": snap.domain}):
+            outputs = self._device.run(snap) if self._device is not None \
+                else self.dag.run(snap)
+        if obs_on:
+            self._h_reduce.labels(snap.domain).observe(
+                time.perf_counter() - t0)
         if not outputs:
             # no reducer accepted this snapshot kind — don't litter the
             # database with empty contexts; surface it via stats instead
@@ -321,14 +379,21 @@ class InTransitEngine:
         if ctx is None:   # lone part of a settled (or TTL-expired) step:
             return        # never write into a mid-serialization manifest
         try:
-            for rname, arrays in outputs.items():
-                api.write_object(ctx, "reduced", snap.domain, arrays,
-                                 reducer=rname, compress=self.compress)
-            if self.durable_parts:
-                # each lane makes its own group durable: group fsyncs
-                # overlap across lanes instead of queueing serially
-                # behind finalize
-                self.db.flush_domain(snap.domain)
+            t1 = time.perf_counter() if obs_on else 0.0
+            with TRACER.span("write", parent=tctx,
+                             args={"step": snap.step,
+                                   "group": snap.domain}):
+                for rname, arrays in outputs.items():
+                    api.write_object(ctx, "reduced", snap.domain, arrays,
+                                     reducer=rname, compress=self.compress)
+                if self.durable_parts:
+                    # each lane makes its own group durable: group fsyncs
+                    # overlap across lanes instead of queueing serially
+                    # behind finalize
+                    self.db.flush_domain(snap.domain)
+            if obs_on:
+                self._h_write.labels(snap.domain).observe(
+                    time.perf_counter() - t1)
         except BaseException:
             with self._wlock:
                 pend.writers -= 1
@@ -431,19 +496,28 @@ class InTransitEngine:
         """Commit one completed context; errors surface via check_errors."""
         staging = self.stages[0].stats.as_dict() if self.n_domains == 1 \
             else [a.stats.as_dict() for a in self.stages]
+        # the trace context is transport metadata, not context attrs
+        meta = {k: v for k, v in pend.meta.items() if k != "_trace"}
+        obs_on = obs_metrics.ENABLED
+        t0 = time.perf_counter() if obs_on else 0.0
         try:
-            self._backend.pre_finalize(pend)
-            pend.ctx.finalize(attrs={"insitu": {
-                "kind": pend.kind,
-                "reducers": sorted(pend.reducers),
-                "merge": {r: self._merge_map[r]
-                          for r in sorted(pend.reducers)
-                          if r in self._merge_map},
-                "n_domains": self.n_domains,
-                "domains": sorted(pend.wrote),
-                "staging": staging,
-                **pend.meta,
-            }})
+            with TRACER.span("manifest.commit", parent=pend.trace,
+                             args={"step": step,
+                                   "domains": sorted(pend.wrote)}):
+                self._backend.pre_finalize(pend)
+                pend.ctx.finalize(attrs={"insitu": {
+                    "kind": pend.kind,
+                    "reducers": sorted(pend.reducers),
+                    "merge": {r: self._merge_map[r]
+                              for r in sorted(pend.reducers)
+                              if r in self._merge_map},
+                    "n_domains": self.n_domains,
+                    "domains": sorted(pend.wrote),
+                    "staging": staging,
+                    **meta,
+                }})
+            if obs_on:
+                self._h_commit.observe(time.perf_counter() - t0)
         except BaseException as e:
             self._errors.append(e)
             with self._wlock:
@@ -489,6 +563,72 @@ class InTransitEngine:
         """Device→host transfer accounting (None unless device_reduce)."""
         return None if self._device is None else \
             self._device.stats.as_dict()
+
+    def _staging_per_group(self) -> list[dict]:
+        # shm areas share their counter words with the lane process, so
+        # the producer-side view already carries consumer increments
+        # (popped/released); after unlink the frozen copy answers
+        return [a.stats.as_dict() for a in self.stages]
+
+    def telemetry(self) -> dict:
+        """One merged observability snapshot across every pipeline layer.
+
+        Aggregates what used to be scattered over ``stages[i].stats``,
+        ``device_stats`` and backend internals (all kept as thin views):
+        staging per group + totals, lane/backend state, device-reduce
+        accounting, write/commit progress, and the engine's metric
+        registry. Identical shape for thread and process backends; for
+        shm staging the producer and consumer sides are merged through
+        the shared control words.
+        """
+        with self._wlock:
+            lanes = {"written_steps": len(self._written),
+                     "failed": self._failed,
+                     "skipped_parts": self._skipped,
+                     "ttl_expired_steps": self._ttl_expired,
+                     "pending_steps": len(self._pending)}
+            last = max(self._written, default=None)
+        per_group = self._staging_per_group()
+        totals = {k: sum(d[k] for d in per_group) for k in per_group[0]}
+        queued = [len(a) if getattr(a, "_words", True) is not None
+                  else None for a in self.stages]   # None once unlinked
+        lanes.update(self._backend.telemetry())
+        return {
+            "backend": self._backend.name,
+            "staging": {"per_group": per_group, "totals": totals,
+                        "queued": queued},
+            "lanes": lanes,
+            "device": self.device_stats,
+            "writes": {"contexts_committed": lanes["written_steps"],
+                       "last_step": last},
+            "metrics": self.obs.snapshot(),
+        }
+
+    def _sync_obs(self) -> None:
+        """Collect-time gauge sync (MetricsRegistry callback): mirrors
+        the passive counters into the registry without touching any hot
+        path."""
+        with self._wlock:
+            state = {"steps_written": len(self._written),
+                     "steps_failed": self._failed,
+                     "parts_skipped": self._skipped,
+                     "steps_ttl_expired": self._ttl_expired,
+                     "steps_pending": len(self._pending)}
+        for k, v in state.items():
+            self.obs.gauge(f"insitu_{k}", "engine progress counter").set(v)
+        per_group = self._staging_per_group()
+        for k in per_group[0]:
+            self.obs.gauge(f"insitu_staging_{k}",
+                           "staging counter, summed over groups").set(
+                sum(d[k] for d in per_group))
+        for k, v in self._backend.telemetry().items():
+            if isinstance(v, (int, float)) and not isinstance(v, bool):
+                self.obs.gauge(f"insitu_lane_{k}",
+                               "lane backend counter").set(v)
+        if self._device is not None:
+            for k, v in self._device.stats.as_dict().items():
+                self.obs.gauge(f"insitu_device_{k}",
+                               "device reduce counter").set(v)
 
     def check_errors(self) -> None:
         if self._errors:

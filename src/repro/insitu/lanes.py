@@ -25,13 +25,17 @@ lane transport slots in without touching the engine.
 """
 from __future__ import annotations
 
+import hashlib
 import multiprocessing
+import pickle
 import queue
 import threading
 import traceback
 
 from ..hercule import api
 from ..hercule.database import DomainWriter, HerculeDB, Record
+from ..obs import metrics as obs_metrics
+from ..obs.trace import TRACER, Tracer, now_us
 from .reducers import ReducerDAG
 from .staging import ShmStagingArea, StagingArea
 
@@ -78,6 +82,24 @@ class LaneBackend:
     def pre_finalize(self, pend) -> None:
         """Durability hook before a context manifest commits."""
 
+    def telemetry(self) -> dict:
+        """Backend-specific counters for ``InTransitEngine.telemetry``."""
+        return {}
+
+
+def reducer_fingerprint(reducers) -> str:
+    """Stable id of a reducer configuration (type + pickled state).
+
+    Keys the lane-side DAG cache of the persistent pool: two borrows
+    with identical reducer configs hash equal, so the resident lane
+    reuses its rebuilt :class:`ReducerDAG` instead of re-unpickling
+    and re-validating per borrow.
+    """
+    payload = pickle.dumps([
+        (type(r).__module__, type(r).__qualname__, r.__getstate__())
+        for r in reducers])
+    return hashlib.sha1(payload).hexdigest()
+
 
 class ThreadLaneBackend(LaneBackend):
     """In-process worker threads (the original engine execution model).
@@ -117,6 +139,7 @@ class ThreadLaneBackend(LaneBackend):
     def _worker(self, area: StagingArea):
         eng = self.engine
         while True:
+            t0 = now_us() if TRACER.enabled else 0.0
             snap = area.pop(timeout=0.25)
             if snap is None:
                 eng._run_deferred()
@@ -124,6 +147,12 @@ class ThreadLaneBackend(LaneBackend):
                 if area.closed and len(area) == 0:
                     return
                 continue
+            tctx = snap.meta.get("_trace")
+            if tctx is not None:
+                # dequeue latency: staged -> picked up by this lane
+                TRACER.record("stage.pop", t0, now_us(), parent=tctx,
+                              args={"step": snap.step,
+                                    "group": snap.domain})
             try:
                 eng._reduce_and_write(snap)
             except BaseException as e:   # surfaced on next submit/drain
@@ -147,15 +176,35 @@ class ThreadLaneBackend(LaneBackend):
             raise TimeoutError(
                 "in-transit workers did not stop; database left open")
 
+    def telemetry(self) -> dict:
+        return {"kind": "thread", "n_lanes": len(self._threads),
+                "lanes_alive": sum(t.is_alive() for t in self._threads)}
+
 
 def _lane_main(handle, root: str, group: int, reducers, compress: bool,
-               durable_parts: bool, results) -> None:
-    """One process lane: attach shm staging, reduce, write own domain."""
+               durable_parts: bool, results, lane_stats=None) -> None:
+    """One process lane: attach shm staging, reduce, write own domain.
+
+    Results-queue wire format (9-tuples; spans/timings/stats may be
+    None): ``(tag, step, group, records, reducers, meta_or_tb, meta,
+    spans, timings)`` for "done"; errors carry the traceback in slot 5;
+    "exit" carries the lane's cumulative stats dict in slot 8.
+
+    ``reducers`` may be a prebuilt :class:`ReducerDAG` (pooled lanes
+    pass their fingerprint-cached DAG) or a reducer list. When a popped
+    snapshot's meta carries ``_trace`` (the parent's submit-span wire
+    context), the lane records stage.pop/reduce/write spans against it
+    and ships them home in the "done" message — cross-process parent
+    linkage with no clock sync beyond the shared epoch.
+    """
     area = ShmStagingArea.attach(handle)
-    dag = ReducerDAG(reducers)
+    dag = reducers if isinstance(reducers, ReducerDAG) \
+        else ReducerDAG(reducers)
     db = HerculeDB.open(root)
+    tracer = Tracer(enabled=True)    # only used when _trace rides in
     try:
         while True:
+            t_pop = now_us()
             try:
                 snap = area.pop(timeout=0.25)
             except BaseException:
@@ -163,19 +212,23 @@ def _lane_main(handle, root: str, group: int, reducers, compress: bool,
                 # (a bare exit would look clean to the collector while
                 # this group's queued steps never settle)
                 results.put(("error", -1, group, None, None,
-                             traceback.format_exc(), None))
+                             traceback.format_exc(), None, None, None))
                 return
             if snap is None:
                 if area.closed and len(area) == 0:
                     return
                 continue
+            tctx = snap.meta.get("_trace")
             try:
+                r0 = now_us()
                 outputs = dag.run(snap)
+                r1 = now_us()
                 if not outputs:
                     results.put(("skipped", snap.step, group, None, None,
-                                 None, None))
+                                 None, None, None, None))
                 else:
                     ctx = DomainWriter(db, snap.step)
+                    w0 = now_us()
                     for rname, arrays in outputs.items():
                         api.write_object(ctx, "reduced", group, arrays,
                                          reducer=rname, compress=compress)
@@ -183,19 +236,36 @@ def _lane_main(handle, root: str, group: int, reducers, compress: bool,
                     # manifest committer fsyncs by path), disk if this
                     # lane owns its own durability
                     db.flush_domain(group, sync=durable_parts)
+                    w1 = now_us()
+                    spans = None
+                    if tctx is not None:
+                        args = {"step": snap.step, "group": group}
+                        tracer.record("stage.pop", t_pop, r0,
+                                      parent=tctx, args=args)
+                        tracer.record("reduce", r0, r1, parent=tctx,
+                                      args=args)
+                        tracer.record("write", w0, w1, parent=tctx,
+                                      args=args)
+                        spans = tracer.spans()
+                        tracer.clear()
                     results.put((
                         "done", snap.step, group,
                         [r.to_json() for r in ctx.records],
-                        sorted(outputs), snap.kind, snap.meta))
+                        sorted(outputs), snap.kind, snap.meta,
+                        spans, ((r1 - r0) / 1e6, (w1 - w0) / 1e6)))
             except BaseException:
                 results.put(("error", snap.step, group, None, None,
-                             traceback.format_exc(), None))
+                             traceback.format_exc(), None, None, None))
             finally:
                 area.release(snap)
     finally:
         db.close()
         area.detach()
-        results.put(("exit", None, group, None, None, None, None))
+        results.put(("exit", None, group, None, None, None, None, None,
+                     dict(lane_stats) if lane_stats else None))
+
+
+_DAG_CACHE_MAX = 8
 
 
 def _pooled_lane_main(task_q, sync, results) -> None:
@@ -205,15 +275,44 @@ def _pooled_lane_main(task_q, sync, results) -> None:
     against a fresh shared-memory area rebuilt from a primitive-free
     spec plus the sync objects this process inherited at spawn
     (``ShmStagingArea.handle_from_spec``). ``None`` ends the lane.
+
+    Tasks name their reducer config by :func:`reducer_fingerprint`; the
+    rebuilt :class:`ReducerDAG` is cached here keyed by that fingerprint
+    so repeat borrows with the same config skip the unpickle+rebuild
+    entirely — the borrower then sends ``reducers=None``. Cache hits and
+    rebuilds ride home in the "exit" message (cumulative over this
+    lane's lifetime) and surface as ``insitu_lane_dag_*`` metrics.
     """
+    dag_cache: dict[str, ReducerDAG] = {}
+    stats = {"jobs": 0, "dag_rebuilds": 0, "dag_cache_hits": 0}
     while True:
         task = task_q.get()
         if task is None:
             return
-        spec, root, group, reducers, compress, durable_parts = task
+        spec, root, group, fp, reducers, compress, durable_parts = task
+        dag = dag_cache.get(fp)
+        if dag is None:
+            if reducers is None:
+                # borrower believed we had this config cached but we
+                # don't (fresh lane in a recycled entry): fail the job
+                # loudly and report the per-job exit the collector awaits
+                results.put(("error", -1, group, None, None,
+                             f"pooled lane has no cached DAG for "
+                             f"fingerprint {fp} and got no reducers",
+                             None, None, None))
+                results.put(("exit", None, group, None, None, None, None,
+                             None, dict(stats)))
+                continue
+            while len(dag_cache) >= _DAG_CACHE_MAX:   # bound residency
+                dag_cache.pop(next(iter(dag_cache)))
+            dag = dag_cache[fp] = ReducerDAG(reducers)
+            stats["dag_rebuilds"] += 1
+        else:
+            stats["dag_cache_hits"] += 1
+        stats["jobs"] += 1
         handle = ShmStagingArea.handle_from_spec(spec, sync)
-        _lane_main(handle, root, group, reducers, compress, durable_parts,
-                   results)
+        _lane_main(handle, root, group, dag, compress, durable_parts,
+                   results, lane_stats=stats)
 
 
 class _PooledLane:
@@ -237,6 +336,9 @@ class _PoolEntry:
         self.results = self.ctx.Queue()
         self.lanes = [_PooledLane(self.ctx, self.results, i)
                       for i in range(n)]
+        #: reducer fingerprints every lane of this entry has cached
+        #: (lanes receive the same configs in lockstep at borrow time)
+        self.known_fps: set[str] = set()
         for lane in self.lanes:
             lane.proc.start()
 
@@ -269,17 +371,24 @@ class LanePool:
     def __init__(self):
         self._free: dict[int, list[_PoolEntry]] = {}
         self._lock = threading.Lock()
+        #: borrow/spawn/release accounting (surfaced through
+        #: ``ProcessLaneBackend.telemetry`` as insitu_lane_pool_*)
+        self.stats = {"borrows": 0, "spawns": 0, "releases": 0,
+                      "discards": 0}
 
     def acquire(self, n: int) -> _PoolEntry:
         dead: list[_PoolEntry] = []
         try:
             with self._lock:
+                self.stats["borrows"] += 1
                 entries = self._free.get(n, [])
                 while entries:
                     entry = entries.pop()
                     if entry.alive():
                         return entry
                     dead.append(entry)   # a lane died while parked
+                    self.stats["discards"] += 1
+                self.stats["spawns"] += 1
             return _PoolEntry(n)
         finally:
             for entry in dead:           # joins run outside the lock
@@ -287,10 +396,18 @@ class LanePool:
 
     def release(self, entry: _PoolEntry) -> None:
         if not entry.alive():
+            with self._lock:
+                self.stats["discards"] += 1
             entry.terminate()
             return
         with self._lock:
+            self.stats["releases"] += 1
             self._free.setdefault(len(entry.lanes), []).append(entry)
+
+    def telemetry(self) -> dict:
+        with self._lock:
+            parked = sum(len(v) for v in self._free.values())
+            return {**self.stats, "parked_entries": parked}
 
     def shutdown(self) -> None:
         """Terminate every parked lane (borrowed entries die with their
@@ -376,15 +493,26 @@ class ProcessLaneBackend(LaneBackend):
             target=self._collect, name="insitu-collector", daemon=True)
         self._stopping = False
         self._exited: set[int] = set()
+        #: lifetime DAG-cache accounting reported by pooled lanes in
+        #: their "exit" messages, summed over this backend's lanes
+        self.lane_stats = {"jobs": 0, "dag_rebuilds": 0,
+                           "dag_cache_hits": 0}
 
     def start(self) -> None:
         if self._pooled:
             engine = self.engine
             reducers = list(engine.dag)
+            # satellite fix: don't re-pickle the reducers on every
+            # borrow — name the config by fingerprint and send the
+            # payload only when the entry's lanes haven't cached it
+            fp = reducer_fingerprint(reducers)
+            payload = None if fp in self._entry.known_fps else reducers
             for g, (lane, area) in enumerate(zip(self._entry.lanes,
                                                  self.stages)):
-                lane.task_q.put((area.spec(), engine.db.root, g, reducers,
-                                 engine.compress, engine.durable_parts))
+                lane.task_q.put((area.spec(), engine.db.root, g, fp,
+                                 payload, engine.compress,
+                                 engine.durable_parts))
+            self._entry.known_fps.add(fp)
         else:
             for p in self._procs:
                 p.start()
@@ -411,11 +539,20 @@ class ProcessLaneBackend(LaneBackend):
             tag, step, group = msg[0], msg[1], msg[2]
             if tag == "exit":
                 self._exited.add(group)
+                if msg[8]:               # pooled lane lifetime stats
+                    for k, v in msg[8].items():
+                        self.lane_stats[k] = \
+                            self.lane_stats.get(k, 0) + v
                 if len(self._exited) == len(self._procs):
                     eng._run_deferred()
                     return
             elif tag == "done":
-                _, _, _, recs, reducers, kind, meta = msg
+                _, _, _, recs, reducers, kind, meta, spans, timings = msg
+                if spans:                # lane spans join the parent trace
+                    TRACER.ingest(spans)
+                if timings is not None and obs_metrics.ENABLED:
+                    eng._h_reduce.labels(group).observe(timings[0])
+                    eng._h_write.labels(group).observe(timings[1])
                 eng._part_records(step, group,
                                   [Record.from_json(r) for r in recs],
                                   set(reducers), kind, meta)
@@ -453,6 +590,15 @@ class ProcessLaneBackend(LaneBackend):
                 # fail fast instead of deadlocking a block-policy
                 # producer against a lane that will never pop again
                 self.stages[g].close()
+
+    def telemetry(self) -> dict:
+        out = {"kind": "process", "pooled": self._pooled,
+               "n_lanes": len(self._procs),
+               "lanes_exited": len(self._exited), **self.lane_stats}
+        if self._pooled:
+            out.update({f"pool_{k}": v
+                        for k, v in LANE_POOL.telemetry().items()})
+        return out
 
     # ------------------------------------------------------------ control
     def pre_finalize(self, pend) -> None:

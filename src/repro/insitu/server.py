@@ -32,7 +32,8 @@ Endpoints (JSON unless framed):
     GET /v1/domains?step=S&reducer=R         contributing domains
     GET /v1/query?step=S&reducer=R[&domain=D][&region=a:b,c:d]   framed
     GET /v1/series?reducer=R&name=N[&steps=s1,s2]                framed
-    GET /v1/stats                            shared-cache counters
+    GET /v1/stats                            cache + request telemetry
+    GET /metrics                             Prometheus text exposition
 
 :class:`RemoteCatalog` mirrors ``Catalog.query`` / ``series`` /
 ``domains`` (and the discovery surface) over these endpoints; a missing
@@ -47,6 +48,7 @@ import json
 import os
 import struct
 import threading
+import time
 import urllib.error
 import urllib.parse
 import urllib.request
@@ -55,7 +57,8 @@ from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 import numpy as np
 
 from ..hercule.database import Record, get_codec
-from .catalog import Catalog, _normalize_region
+from ..obs import metrics as obs_metrics
+from .catalog import Catalog, _hist_digest, _normalize_region
 
 FRAME_MAGIC = b"HXF1"
 FRAME_SCHEMA = "hx-frame/1"
@@ -144,11 +147,29 @@ class CatalogServer:
             self.catalog = Catalog(root, cache_entries=cache_entries)
             self._own_catalog = True
         self.compress = compress
-        handler = _make_handler(self.catalog, compress, token)
+        self.obs = obs_metrics.MetricsRegistry()
+        self._sync_obs()
+        handler = _make_handler(self.catalog, compress, token, self.obs)
         self.httpd = ThreadingHTTPServer((host, port), handler)
         self.httpd.daemon_threads = True
         self.host, self.port = self.httpd.server_address[:2]
         self._thread: threading.Thread | None = None
+
+    def _sync_obs(self) -> None:
+        """Mirror the shared catalog's cache counters into gauges."""
+        cat = self.catalog
+        for name, fn in (("entries", lambda: len(cat._cache)),
+                         ("hits", lambda: cat.cache_hits),
+                         ("misses", lambda: cat.cache_misses),
+                         ("io_reads", lambda: cat.io_reads)):
+            self.obs.gauge(f"catalog_cache_{name}",
+                           f"shared reduction cache: {name}"
+                           ).set_function(fn)
+
+    def telemetry(self) -> dict:
+        """JSON-able merged snapshot: cache counters + request metrics."""
+        return {"cache": self.catalog.cache_info(),
+                "metrics": self.obs.snapshot()}
 
     @property
     def url(self) -> str:
@@ -176,12 +197,52 @@ class CatalogServer:
             self.catalog.close()
 
 
+#: routes whose paths become metric label values; anything else is
+#: folded into "other" so probing clients can't explode the cardinality
+_KNOWN_ENDPOINTS = frozenset({
+    "/v1/manifest", "/v1/steps", "/v1/reducers", "/v1/attrs",
+    "/v1/domains", "/v1/query", "/v1/series", "/v1/stats", "/metrics"})
+
+PROMETHEUS_CTYPE = "text/plain; version=0.0.4; charset=utf-8"
+
+
 def _make_handler(catalog: Catalog, compress: bool,
-                  token: str | None = None):
+                  token: str | None = None,
+                  obs: obs_metrics.MetricsRegistry | None = None):
     #: step -> last seen manifest identity; a change means the context
     #: was rewritten (engine resubmission) and cached bytes are stale
     idents: dict[int, tuple[int, int]] = {}
     ident_lock = threading.Lock()
+
+    obs = obs if obs is not None else obs_metrics.MetricsRegistry()
+    m_requests = obs.counter(
+        "catalog_requests_total", "HTTP requests by endpoint and status",
+        labels=("endpoint", "status"))
+    m_seconds = obs.histogram(
+        "catalog_request_seconds", "request handling latency",
+        labels=("endpoint",))
+    m_bytes = obs.counter(
+        "catalog_bytes_sent_total", "response body bytes by endpoint",
+        labels=("endpoint",))
+    m_304 = obs.counter(
+        "catalog_etag_304_total",
+        "ETag revalidations answered 304 (headers only, no payload)")
+
+    def _stats_payload() -> dict:
+        """/v1/stats body: cache counters + per-endpoint request stats."""
+        info = catalog.cache_info()
+        requests: dict[str, dict[str, int]] = {}
+        for (endpoint, status), child in m_requests.children():
+            requests.setdefault(endpoint, {})[status] = int(child.value)
+        info["server"] = {
+            "requests": requests,
+            "etag_304": int(m_304.value),
+            "bytes_sent": {ep: int(c.value)
+                           for (ep,), c in m_bytes.children()},
+            "request_seconds": {ep: _hist_digest(c)
+                                for (ep,), c in m_seconds.children()},
+        }
+        return info
 
     class Handler(BaseHTTPRequestHandler):
         protocol_version = "HTTP/1.1"
@@ -192,6 +253,8 @@ def _make_handler(catalog: Catalog, compress: bool,
         # ------------------------------------------------------ responses
         def _send(self, code: int, body: bytes, ctype: str,
                   headers: dict | None = None) -> None:
+            self._obs_status = code
+            self._obs_bytes += len(body)
             self.send_response(code)
             self.send_header("Content-Type", ctype)
             self.send_header("Content-Length", str(len(body)))
@@ -247,6 +310,10 @@ def _make_handler(catalog: Catalog, compress: bool,
         # --------------------------------------------------------- routes
         def do_GET(self):   # noqa: N802  (http.server API)
             url = urllib.parse.urlsplit(self.path)
+            endpoint = url.path if url.path in _KNOWN_ENDPOINTS else "other"
+            self._obs_status = 0      # 0 = aborted before any response
+            self._obs_bytes = 0
+            t0 = time.perf_counter()
             q = {k: v[-1] for k, v in
                  urllib.parse.parse_qs(url.query).items()}
             try:
@@ -270,6 +337,14 @@ def _make_handler(catalog: Catalog, compress: bool,
             except Exception as e:      # noqa: BLE001
                 self._json({"error": "internal", "message": repr(e)},
                            code=500)
+            finally:
+                if obs_metrics.ENABLED:
+                    m_requests.labels(endpoint, self._obs_status or
+                                      "aborted").inc()
+                    m_seconds.labels(endpoint).observe(
+                        time.perf_counter() - t0)
+                    if self._obs_bytes:
+                        m_bytes.labels(endpoint).inc(self._obs_bytes)
 
         @staticmethod
         def _param(q: dict, name: str) -> str:
@@ -297,7 +372,13 @@ def _make_handler(catalog: Catalog, compress: bool,
                 self._json(catalog.domains(int(self._param(q, "step")),
                                            self._param(q, "reducer")))
             elif path == "/v1/stats":
-                self._json(catalog.cache_info())
+                self._json(_stats_payload())
+            elif path == "/metrics":
+                # both registries: request-level (this handler's) and
+                # the shared catalog's query/series latency families
+                text = (obs.render_prometheus()
+                        + catalog.obs.render_prometheus())
+                self._send(200, text.encode(), PROMETHEUS_CTYPE)
             elif path == "/v1/query":
                 domain = int(q["domain"]) if "domain" in q else None
                 region = _parse_region(q["region"]) if "region" in q \
@@ -311,6 +392,9 @@ def _make_handler(catalog: Catalog, compress: bool,
                         t.strip() for t in inm.split(",")):
                     # client already holds these exact bytes: headers
                     # only, no body (RFC 9110 §15.4.5)
+                    self._obs_status = 304
+                    if obs_metrics.ENABLED:
+                        m_304.inc()
                     self.send_response(304)
                     self.send_header("ETag", tag)
                     self.send_header("Content-Length", "0")
@@ -430,8 +514,12 @@ class RemoteCatalog:
         return self._get_json("/v1/domains", step=step, reducer=reducer)
 
     def cache_info(self) -> dict:
-        """The *server's* shared-cache counters."""
+        """The *server's* shared-cache counters (+ request telemetry)."""
         return self._get_json("/v1/stats")
+
+    def metrics(self) -> str:
+        """The server's Prometheus ``/metrics`` exposition text."""
+        return self._get("/metrics").decode()
 
     def client_cache_info(self) -> dict:
         """This viewer's ETag-cache counters."""

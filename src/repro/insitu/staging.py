@@ -159,6 +159,15 @@ class _BufferSet:
         return out, reuses, allocs, nbytes
 
 
+#: StagingStats field order — also the shm control-word stats layout of
+#: :class:`_ShmStats` (one int64 word per field, block_seconds stored
+#: as integer nanoseconds; DESIGN.md §15)
+STAT_FIELDS = ("pushed", "accepted", "dropped", "evicted",
+               "buffer_reuses", "buffer_allocs", "bytes_staged",
+               "block_seconds", "popped", "released")
+N_STAT_WORDS = len(STAT_FIELDS)
+
+
 @dataclasses.dataclass
 class StagingStats:
     pushed: int = 0
@@ -169,9 +178,51 @@ class StagingStats:
     buffer_allocs: int = 0
     bytes_staged: int = 0
     block_seconds: float = 0.0
+    popped: int = 0           # snapshots taken by a consumer
+    released: int = 0         # popped snapshots whose buffers returned
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
+
+    def freeze(self) -> "StagingStats":
+        return self          # already host-resident (detach idempotence)
+
+
+class _ShmStats:
+    """StagingStats view over shared control words (ShmStagingArea).
+
+    Producer and every attached consumer bind the *same* int64 words,
+    so counters incremented on either side of the process boundary are
+    visible to both — ``stats`` is truthful from any end. All mutations
+    happen under the area's cross-process lock; reads are single-word
+    int64 loads (torn values impossible). ``block_seconds`` is stored
+    as integer nanoseconds so it shares the int64 word layout.
+    """
+
+    __slots__ = ("_w",)
+
+    def __init__(self, words):
+        object.__setattr__(self, "_w", words)
+
+    def __getattr__(self, name):
+        try:
+            i = STAT_FIELDS.index(name)
+        except ValueError:
+            raise AttributeError(name) from None
+        v = int(self._w[i])
+        return v / 1e9 if name == "block_seconds" else v
+
+    def __setattr__(self, name, value):
+        i = STAT_FIELDS.index(name)   # raises ValueError on foreign attrs
+        self._w[i] = int(round(value * 1e9)) \
+            if name == "block_seconds" else int(value)
+
+    def as_dict(self) -> dict:
+        return {f: getattr(self, f) for f in STAT_FIELDS}
+
+    def freeze(self) -> StagingStats:
+        """Materialize a plain StagingStats (survives segment unlink)."""
+        return StagingStats(**self.as_dict())
 
 
 class StagingArea:
@@ -318,6 +369,7 @@ class StagingArea:
             snap = self._queue.pop(0)
             # a queue slot opened up for block-policy producers; the
             # buffer set stays owned by the snapshot until release()
+            self.stats.popped += 1
             self._not_full.notify()
             return snap
 
@@ -328,6 +380,7 @@ class StagingArea:
         with self._lock:
             self._free.append(snap._bufset)
             snap._bufset = None
+            self.stats.released += 1
             self._not_full.notify()
 
     def _reclaim(self, snap: Snapshot) -> None:
@@ -364,6 +417,10 @@ class StagingArea:
 #     [4          .. 4+n)   queue ring of slot ids (oldest at q_head)
 #     [4+n        .. 4+2n)  per-slot state (FREE/RESERVED/QUEUED/INFLIGHT)
 #     [4+2n       .. 4+6n)  per-slot meta: step, generation, domain, kind
+#     [4+6n       .. 4+6n+N_STAT_WORDS)  shared StagingStats counters
+#       (STAT_FIELDS order, block_seconds as integer ns): producer and
+#       consumer mutate the same words under the lock, so stats() is
+#       truthful from either side of the process boundary
 #
 #   one data segment per slot, resized (new generation) when a snapshot
 #   outgrows it — steady-state pushes reuse the mapping, the
@@ -451,7 +508,8 @@ class ShmStagingArea:
         ctx = mp_context or multiprocessing.get_context("spawn")
         self._uid = f"hx{os.getpid():x}_{os.urandom(4).hex()}"
         self._shm = shared_memory.SharedMemory(
-            create=True, size=(4 + 6 * n) * 8, name=f"{self._uid}ctl")
+            create=True, size=(4 + 6 * n + N_STAT_WORDS) * 8,
+            name=f"{self._uid}ctl")
         if sync is not None:
             # externally owned primitives (the persistent lane pool:
             # a pooled lane inherited them at spawn, long before this
@@ -467,7 +525,6 @@ class ShmStagingArea:
         #: producer-side segment cache: slot -> (gen, SharedMemory)
         self._segs: dict[int, tuple[int, object]] = {}
         self._ctrl = StrideController(capacity)
-        self.stats = StagingStats()
         self._consumer = False
         self._untrack = False
 
@@ -478,10 +535,13 @@ class ShmStagingArea:
 
     def _bind(self, ctrl, n: int) -> None:
         self.n_slots = n
-        self._words = np.ndarray((4 + 6 * n,), np.int64, buffer=ctrl.buf)
+        self._words = np.ndarray((4 + 6 * n + N_STAT_WORDS,), np.int64,
+                                 buffer=ctrl.buf)
         self._ring = self._words[4:4 + n]
         self._state = self._words[4 + n:4 + 2 * n]
-        self._meta = self._words[4 + 2 * n:].reshape(n, 4)
+        self._meta = self._words[4 + 2 * n:4 + 6 * n].reshape(n, 4)
+        # both ends mutate the same counters (under the shared lock)
+        self.stats = _ShmStats(self._words[4 + 6 * n:])
 
     # ---------------------------------------------------------- handle
     def handle(self) -> ShmHandle:
@@ -529,7 +589,6 @@ class ShmStagingArea:
         self._segs = {}
         self.on_evict = None
         self._consumer = True
-        self.stats = StagingStats()   # consumer-side: unused, API parity
         return self
 
     # -------------------------------------------------------------- push
@@ -715,6 +774,7 @@ class ShmStagingArea:
             self._words[2] -= 1
             self._state[slot] = _INFLIGHT
             gen = int(self._meta[slot][1])
+            self.stats.popped += 1
             self._not_full.notify()
         head, arrays = self._slot_views(slot, gen)
         return Snapshot(step=head["step"], kind=head["kind"], arrays=arrays,
@@ -732,6 +792,7 @@ class ShmStagingArea:
         with self._lock:
             self._state[snap._slot] = _FREE
             snap._slot = None
+            self.stats.released += 1
             self._not_full.notify()
 
     # ------------------------------------------------------------- admin
@@ -762,7 +823,9 @@ class ShmStagingArea:
         for _, seg in self._segs.values():
             self._close_seg(seg)
         self._segs.clear()
-        # drop numpy views before closing the mapping they alias
+        # drop numpy views before closing the mapping they alias; stats
+        # stay readable afterwards as a frozen host-side copy
+        self.stats = self.stats.freeze()
         self._words = self._ring = self._state = self._meta = None
         self._close_seg(self._shm)
 
@@ -778,6 +841,7 @@ class ShmStagingArea:
             self._close_seg(seg)
             seg.unlink()
         self._segs.clear()
+        self.stats = self.stats.freeze()
         self._words = self._ring = self._state = self._meta = None
         self._close_seg(self._shm)
         self._shm.unlink()

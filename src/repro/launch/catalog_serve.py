@@ -20,6 +20,7 @@ from __future__ import annotations
 import argparse
 import shutil
 import tempfile
+import time
 
 import numpy as np
 
@@ -89,18 +90,59 @@ def _selftest(root: str | None, compress: bool,
         # ETag revalidation: a re-query of every object must 304 and
         # serve from the client cache (zero payload bytes)
         requeries = 0
+        t_304 = 0.0
         for s in steps:
             for reducer in local.reducers(s):
+                t0 = time.perf_counter()
                 rc.query(s, reducer)
+                t_304 += time.perf_counter() - t0
                 requeries += 1
         cinfo = rc.client_cache_info()
         if cinfo["etag_hits"] < requeries:
             print(f"   FAIL: expected {requeries} ETag revalidation "
                   f"hits, got {cinfo}")
             return 1
+        # cold-vs-304 split: a fresh viewer (empty ETag cache, warm
+        # server cache) pays the full payload transfer each query
+        rc_cold = RemoteCatalog(srv.url, token=token)
+        t_cold = 0.0
+        for s in steps:
+            for reducer in local.reducers(s):
+                t0 = time.perf_counter()
+                rc_cold.query(s, reducer)
+                t_cold += time.perf_counter() - t0
+        print(f"   latency split over {requeries} queries: full transfer "
+              f"{1e3 * t_cold / requeries:.2f} ms/q vs ETag-304 "
+              f"revalidation {1e3 * t_304 / requeries:.2f} ms/q")
+        # observability surface: /metrics must expose the request and
+        # catalog latency families, behind the same bearer auth
+        text = rc.metrics()
+        required = ("catalog_requests_total", "catalog_request_seconds",
+                    "catalog_bytes_sent_total", "catalog_etag_304_total",
+                    "catalog_query_seconds", "catalog_cache_hits")
+        missing = [f for f in required if f"# TYPE {f} " not in text]
+        if missing:
+            print(f"   FAIL: /metrics missing families: {missing}")
+            return 1
+        try:
+            RemoteCatalog(srv.url).metrics()
+        except PermissionError:
+            pass
+        else:
+            print("   FAIL: /metrics served without a bearer token")
+            return 1
         info = rc.cache_info()
+        sv = info["server"]
+        if sv["etag_304"] < requeries:
+            print(f"   FAIL: server counted {sv['etag_304']} 304s, "
+                  f"expected >= {requeries}")
+            return 1
+        print(f"   /metrics: {len(text.splitlines())} lines, "
+              f"{len(required)} required families present")
         print(f"   {checked} arrays compared, {mismatched} mismatched; "
               f"server cache: hits={info['hits']} misses={info['misses']}; "
+              f"server 304s={sv['etag_304']} "
+              f"query requests={sv['requests'].get('/v1/query')}; "
               f"client etag cache: {cinfo}")
         return 1 if mismatched or not checked else 0
     finally:

@@ -68,7 +68,16 @@ def main(argv=None):
     p.add_argument("--serve-check", action="store_true",
                    help="also serve the catalog on an ephemeral port and "
                         "verify RemoteCatalog == local merge-at-read")
+    p.add_argument("--trace-out", default=None, metavar="PATH",
+                   help="record per-step spans (submit -> staging -> "
+                        "reduce -> write -> commit, across process lanes) "
+                        "and write a Chrome-trace JSON loadable in "
+                        "Perfetto / chrome://tracing")
     args = p.parse_args(argv)
+
+    if args.trace_out:
+        from ..obs import TRACER
+        TRACER.enable()
 
     shutil.rmtree(args.out, ignore_errors=True)
     reducers = default_reducers(args.resolution, args.lod, args.domains)
@@ -115,10 +124,21 @@ def main(argv=None):
               f"vs {staged/1e6:.2f} MB staged on device "
               f"({ds['device_objects']} device objects, "
               f"fallback_runs={ds['fallback_runs']})")
+    tel = engine.telemetry()
+    tot = tel["staging"]["totals"]
+    print(f"   telemetry[{tel['backend']}]: accepted={tot['accepted']} "
+          f"popped={tot['popped']} released={tot['released']} "
+          f"bytes_staged={tot['bytes_staged']/1e6:.2f} MB; "
+          f"lanes={tel['lanes']}")
     engine.close()
     if args.lane_pool:
         from ..insitu import shutdown_pool
         shutdown_pool()       # reclaim the resident lanes before exit
+    if args.trace_out:
+        from ..obs import TRACER
+        n_spans = TRACER.write_chrome_trace(args.trace_out)
+        print(f"   trace: {n_spans} spans -> {args.trace_out} "
+              f"(open in Perfetto or chrome://tracing)")
 
     print("== analysis flow: catalog replay (domain-merged queries)")
     cat = Catalog(args.out)

@@ -46,6 +46,9 @@ def main(argv=None):
     p.add_argument("--insitu-device-reduce", action="store_true",
                    help="stage train-state snapshots on the accelerator "
                         "(zero-copy) and transfer only reduced objects")
+    p.add_argument("--insitu-trace-out", default=None, metavar="PATH",
+                   help="record in-transit spans and write a Chrome-trace "
+                        "JSON (Perfetto) when training finishes")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
@@ -65,6 +68,7 @@ def main(argv=None):
         insitu_domains=args.insitu_domains,
         insitu_backend=args.insitu_backend,
         insitu_device_reduce=args.insitu_device_reduce,
+        insitu_trace_out=args.insitu_trace_out,
         seed=args.seed)
     trainer.run(args.steps)
     return 0

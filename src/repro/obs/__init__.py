@@ -1,0 +1,21 @@
+"""Observability substrate for the in-transit pipeline (DESIGN.md §15).
+
+Two stdlib-only pieces:
+
+  * :mod:`repro.obs.metrics` — counters / gauges / fixed-bucket
+    histograms behind a :class:`MetricsRegistry`, with Prometheus text
+    and JSON snapshot renderers.
+  * :mod:`repro.obs.trace` — per-step span tracing with cross-process
+    context propagation and Chrome-trace/Perfetto export.
+"""
+from . import metrics, trace
+from .metrics import (Counter, Gauge, Histogram, LATENCY_BUCKETS,
+                      MetricsRegistry, REGISTRY, exponential_buckets,
+                      set_enabled)
+from .trace import TRACER, Span, Tracer, now_us
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "LATENCY_BUCKETS",
+    "MetricsRegistry", "REGISTRY", "Span", "TRACER", "Tracer",
+    "exponential_buckets", "metrics", "now_us", "set_enabled", "trace",
+]

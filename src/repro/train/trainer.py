@@ -60,7 +60,8 @@ class Trainer:
                  insitu_dir: str | None = None, insitu_every: int = 0,
                  insitu_reducers=None, insitu_policy: str = "drop-oldest",
                  insitu_domains: int = 1, insitu_backend: str = "thread",
-                 insitu_device_reduce: bool = False):
+                 insitu_device_reduce: bool = False,
+                 insitu_trace_out: str | None = None):
         self.lm = lm
         self.cfg = lm.cfg
         self.opt_cfg = opt_cfg or optim.OptConfig()
@@ -92,6 +93,10 @@ class Trainer:
                 policy=insitu_policy, ncf=ncf, domains=insitu_domains,
                 backend=insitu_backend,
                 device_reduce=insitu_device_reduce)
+        self.insitu_trace_out = insitu_trace_out
+        if insitu_trace_out and self.insitu is not None:
+            from ..obs import TRACER
+            TRACER.enable()
         self.monitor = StragglerMonitor()
         self.seed = seed
         self._stop = False
@@ -163,6 +168,11 @@ class Trainer:
         self.ckpt.close()
         if self.insitu is not None:
             self.insitu.close()
+            if self.insitu_trace_out:
+                from ..obs import TRACER
+                n = TRACER.write_chrome_trace(self.insitu_trace_out)
+                print(f"in-transit trace: {n} spans -> "
+                      f"{self.insitu_trace_out}", flush=True)
         return state
 
     def _dump_analysis(self, step: int, state):

@@ -1,0 +1,333 @@
+"""End-to-end telemetry (PR 6 acceptance).
+
+Covers: the metrics substrate (thread-sharded counters, histogram
+quantile accuracy vs numpy, Prometheus text validity, registry
+idempotence), span tracing with cross-process propagation through the
+shm descriptor headers, the engine's unified ``telemetry()`` snapshot
+for both lane backends, truthful shared-word staging stats across
+attach, and the catalog server's ``/metrics`` + extended ``/v1/stats``
+surface.
+"""
+import json
+import math
+import re
+import threading
+
+import numpy as np
+import pytest
+
+from repro.insitu import (Catalog, CatalogServer, InTransitEngine,
+                          LevelHistogramReducer, ProjectionReducer,
+                          RemoteCatalog, ShmStagingArea, SliceReducer)
+from repro.insitu.staging import STAT_FIELDS
+from repro.obs import TRACER, MetricsRegistry, metrics
+from repro.sim import amrgen, fields
+
+
+@pytest.fixture(scope="module")
+def sedov_tree():
+    t = amrgen.generate_tree(fields.sedov(), min_level=2, max_level=4,
+                             threshold=1.2)
+    t.validate()
+    return t
+
+
+def _reducers():
+    return [SliceReducer(field="density", axis=2, position=0.5,
+                         resolution=32),
+            ProjectionReducer(field="density", axis=2, resolution=32),
+            LevelHistogramReducer(field="density", bins=16, lo=0.0,
+                                  hi=8.0)]
+
+
+@pytest.fixture()
+def tracing():
+    """Enable the global tracer for one test, restore after."""
+    TRACER.clear()
+    TRACER.enable()
+    yield TRACER
+    TRACER.disable()
+    TRACER.clear()
+
+
+# ------------------------------------------------------------ instruments
+
+def test_counter_thread_shards():
+    reg = MetricsRegistry()
+    c = reg.counter("test_total", "help text")
+    n_threads, per_thread = 8, 5000
+
+    def work():
+        for _ in range(per_thread):
+            c.inc()
+
+    threads = [threading.Thread(target=work) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    c.inc(2.5)
+    assert c.value == n_threads * per_thread + 2.5
+    # shards per writing thread (idents may be reused after joins, so
+    # the count is bounded, not exact); totals survive reuse regardless
+    assert 1 <= len(c._children[()]._shards) <= n_threads + 1
+
+
+def test_histogram_quantiles_vs_numpy():
+    """Interpolated bucket quantiles land within one bucket width of
+    the exact numpy percentiles."""
+    rng = np.random.default_rng(42)
+    samples = rng.lognormal(mean=-7.0, sigma=1.5, size=20_000)
+    h = metrics.Histogram()
+    for v in samples:
+        h.observe(float(v))
+    assert h.count == len(samples)
+    assert h.sum == pytest.approx(samples.sum(), rel=1e-9)
+    bounds = [0.0, *h.bounds]
+    for q in (0.5, 0.9, 0.99):
+        est = h.quantile(q)
+        exact = float(np.percentile(samples, 100 * q))
+        i = int(np.searchsorted(h.bounds, exact))
+        width = bounds[i + 1] - bounds[i] if i < len(h.bounds) \
+            else bounds[-1]
+        assert abs(est - exact) <= width, (q, est, exact, width)
+
+
+def test_histogram_empty_and_overflow():
+    h = metrics.Histogram(buckets=(1.0, 2.0))
+    assert math.isnan(h.quantile(0.5))
+    h.observe(100.0)      # +Inf bucket: quantile reports last bound
+    assert h.quantile(0.5) == 2.0
+    assert h.merged()[0] == [0, 0, 1]
+
+
+def test_render_prometheus_valid():
+    reg = MetricsRegistry()
+    reg.counter("req_total", "requests", labels=("ep",)).labels("/q").inc(3)
+    reg.gauge("depth", "queue depth").set(7)
+    h = reg.histogram("lat_seconds", "latency", buckets=(0.1, 1.0))
+    h.observe(0.05)
+    h.observe(0.5)
+    h.observe(5.0)
+    text = reg.render_prometheus()
+    assert '# TYPE req_total counter' in text
+    assert 'req_total{ep="/q"} 3' in text
+    assert 'depth 7' in text
+    # histogram buckets are cumulative and end at +Inf == _count
+    assert 'lat_seconds_bucket{le="0.1"} 1' in text
+    assert 'lat_seconds_bucket{le="1"} 2' in text
+    assert 'lat_seconds_bucket{le="+Inf"} 3' in text
+    assert 'lat_seconds_count 3' in text
+    # every non-comment line is name{labels} value
+    for line in text.strip().splitlines():
+        if not line.startswith("#"):
+            assert re.match(r'^[a-zA-Z_:][\w:]*(\{.*\})? \S+$', line), line
+
+
+def test_registry_idempotent_and_mismatch():
+    reg = MetricsRegistry()
+    a = reg.counter("x_total")
+    assert reg.counter("x_total") is a
+    with pytest.raises(ValueError, match="already registered"):
+        reg.gauge("x_total")
+    with pytest.raises(ValueError, match="already registered"):
+        reg.counter("x_total", labels=("k",))
+    with pytest.raises(ValueError, match="label values"):
+        reg.counter("y_total", labels=("k",)).labels("a", "b")
+
+
+def test_registry_callback_runs_before_collect():
+    reg = MetricsRegistry()
+
+    def sync():
+        reg.gauge("lazy").set(11)      # registered inside the callback
+
+    reg.register_callback(sync)
+    snap = reg.snapshot()
+    assert snap["lazy"]["samples"][0]["value"] == 11
+
+
+# ----------------------------------------------------------------- spans
+
+def test_span_nesting_and_export(tracing):
+    with tracing.span("outer", args={"step": 1}) as outer:
+        with tracing.span("inner") as inner:
+            inner.set(n=3)
+    doc = tracing.export()
+    ev = {e["name"]: e for e in doc["traceEvents"]}
+    assert ev["inner"]["args"]["parent_id"] == outer.span_id
+    assert ev["inner"]["args"]["trace_id"] == outer.trace_id
+    assert ev["inner"]["args"]["n"] == 3
+    assert ev["outer"]["ph"] == "X" and ev["outer"]["dur"] >= 0
+    json.dumps(doc)    # chrome-trace must be strict JSON
+
+
+def test_noop_when_disabled():
+    TRACER.clear()
+    assert not TRACER.enabled
+    with TRACER.span("nope") as sp:
+        sp.set(a=1)
+    assert TRACER.spans() == []
+
+
+# ----------------------------------------------- shm stats shared words
+
+def test_shm_stats_shared_across_attach():
+    area = ShmStagingArea(capacity=4, policy="block")
+    try:
+        consumer = ShmStagingArea.attach(area.handle())
+        arrays = {"x": np.arange(64, dtype=np.float64)}
+        for s in (1, 2, 3):
+            area.push(s, arrays, meta={"m": s})
+        snap = consumer.pop(timeout=5.0)
+        consumer.release(snap)
+        # both ends read the same control words
+        for view in (area.stats, consumer.stats):
+            assert view.pushed == 3 and view.accepted == 3
+            assert view.popped == 1 and view.released == 1
+            assert view.bytes_staged > 0
+        d = area.stats.as_dict()
+        assert set(d) == set(STAT_FIELDS)
+        consumer.detach()
+        # consumer's frozen copy survives its detach; producer words live
+        assert consumer.stats.popped == 1
+        assert area.stats.accepted == 3
+    finally:
+        area.unlink()
+    # frozen after unlink: plain attributes, no shm behind them
+    assert area.stats.accepted == 3
+
+
+# ------------------------------------------- engine telemetry + tracing
+
+@pytest.mark.parametrize("backend", ["thread", "process"])
+def test_engine_telemetry_merged(tmp_path, sedov_tree, backend):
+    eng = InTransitEngine(str(tmp_path / backend), _reducers(), domains=2,
+                          backend=backend, policy="block",
+                          queue_capacity=2).start()
+    for s in (1, 2):
+        assert eng.submit(s, sedov_tree)
+    eng.drain()
+    tel = eng.telemetry()
+    assert tel["backend"] == backend
+    tot = tel["staging"]["totals"]
+    # 2 steps x 2 groups staged, and the consumer-side counters are
+    # visible from the producer (the PR-6 dead-stats fix)
+    assert tot["accepted"] == 4
+    assert tot["popped"] == 4 and tot["released"] == 4
+    assert tel["lanes"]["written_steps"] == 2
+    assert tel["lanes"]["kind"] == backend
+    m = tel["metrics"]
+    assert m["insitu_steps_written"]["samples"][0]["value"] == 2
+    assert m["insitu_submit_seconds"]["samples"][0]["value"]["count"] == 2
+    json.dumps(tel)     # the whole snapshot is JSON-able
+    eng.close()
+    # telemetry stays readable after close (frozen stats, no shm)
+    tel2 = eng.telemetry()
+    assert tel2["staging"]["totals"]["accepted"] == 4
+
+
+def test_trace_propagates_across_process_lanes(tmp_path, sedov_tree,
+                                               tracing):
+    eng = InTransitEngine(str(tmp_path / "db"), _reducers(), domains=2,
+                          backend="process", policy="block",
+                          queue_capacity=2).start()
+    assert eng.submit(1, sedov_tree)
+    eng.close()
+    spans = tracing.spans()
+    by_name: dict = {}
+    for sp in spans:
+        by_name.setdefault(sp["name"], []).append(sp)
+    assert {"submit", "stage.push", "reduce", "write",
+            "manifest.commit"} <= set(by_name)
+    submit = by_name["submit"][0]
+    # lane spans were recorded in other OS processes...
+    here = {submit["pid"]}
+    lane_pids = {sp["pid"] for sp in by_name["reduce"]}
+    assert lane_pids and not lane_pids & here
+    # ...and still link to the producer's submit span
+    for name in ("reduce", "write"):
+        for sp in by_name[name]:
+            assert sp["parent_id"] == submit["span_id"]
+            assert sp["trace_id"] == submit["trace_id"]
+    assert by_name["manifest.commit"][0]["parent_id"] == submit["span_id"]
+    # the wire context never leaks into user-facing attrs
+    cat = Catalog(str(tmp_path / "db"))
+    assert "_trace" not in cat.attrs(1)
+    cat.close()
+    out = tmp_path / "trace.json"
+    n = tracing.write_chrome_trace(str(out))
+    assert n == len(spans)
+    doc = json.loads(out.read_text())
+    assert len(doc["traceEvents"]) == n
+
+
+# ------------------------------------------------------- server surface
+
+def test_server_metrics_and_stats(tmp_path, sedov_tree):
+    root = str(tmp_path / "db")
+    eng = InTransitEngine(root, _reducers(), domains=2,
+                          policy="block", queue_capacity=2).start()
+    assert eng.submit(1, sedov_tree)
+    eng.close()
+
+    srv = CatalogServer(root, port=0, token="t0k").start()
+    try:
+        rc = RemoteCatalog(srv.url, token="t0k")
+        name = rc.reducers(1)[0]
+        rc.query(1, name)
+        rc.query(1, name)            # ETag revalidation -> 304
+        with pytest.raises(KeyError):
+            rc.query(1, "absent")
+
+        info = rc.cache_info()
+        # stable counter keys untouched, telemetry sections added
+        assert {"entries", "hits", "misses", "io_reads",
+                "timing", "server"} <= set(info)
+        assert info["timing"]["query_miss"]["count"] >= 1
+        sv = info["server"]
+        assert sv["etag_304"] == 1
+        q = sv["requests"]["/v1/query"]
+        assert q["200"] == 1 and q["304"] == 1 and q["404"] == 1
+        assert sv["request_seconds"]["/v1/query"]["count"] == 3
+        assert sv["bytes_sent"]["/v1/query"] > 0
+
+        text = rc.metrics()
+        for fam in ("catalog_requests_total", "catalog_request_seconds",
+                    "catalog_bytes_sent_total", "catalog_etag_304_total",
+                    "catalog_cache_hits", "catalog_query_seconds"):
+            assert f"# TYPE {fam} " in text, fam
+        # cumulative +Inf bucket equals the count for the query endpoint
+        inf = re.search(r'catalog_request_seconds_bucket\{endpoint='
+                        r'"/v1/query",le="\+Inf"\} (\d+)', text)
+        cnt = re.search(r'catalog_request_seconds_count\{endpoint='
+                        r'"/v1/query"\} (\d+)', text)
+        assert inf.group(1) == cnt.group(1) == "3"
+        # /metrics sits behind the same bearer auth as the data routes
+        with pytest.raises(PermissionError):
+            RemoteCatalog(srv.url).metrics()
+        # unknown paths fold into the bounded "other" endpoint label
+        with pytest.raises(KeyError):
+            rc._get("/v1/bogus")
+        assert "other" in rc.cache_info()["server"]["requests"]
+    finally:
+        srv.close()
+
+
+def test_obs_kill_switch(tmp_path, sedov_tree):
+    """metrics.ENABLED=False stops observes on the full pipeline path
+    (the overhead benchmark's bare arm)."""
+    metrics.set_enabled(False)
+    try:
+        eng = InTransitEngine(str(tmp_path / "db"), _reducers(),
+                              policy="block", queue_capacity=2).start()
+        assert eng.submit(1, sedov_tree)
+        eng.drain()
+        m = eng.telemetry()["metrics"]
+        assert m["insitu_submit_seconds"]["samples"][0]["value"]["count"] \
+            == 0
+        # gauges still sync: they read external stats, not the hot path
+        assert m["insitu_steps_written"]["samples"][0]["value"] == 1
+        eng.close()
+    finally:
+        metrics.set_enabled(True)
