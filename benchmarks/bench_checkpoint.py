@@ -1,19 +1,22 @@
 """Beyond-paper: ML train-state checkpoint throughput with the Hercule
-HProt flow — raw vs temporal-delta vs pyramid codecs, save + restore,
-plus the NCF file-count effect on a sharded state."""
+HProt flow — raw vs temporal-delta vs pyramid codecs, save + restore —
+plus the PR-7 headline: train-step *stall* under the async staged-lane
+manager vs a fully synchronous save, and the delta-checkpoint byte
+ratio. ``run()`` returns the stall ratio (sync/async); CI floors it at
+2.0, i.e. async stall must be at most half the sync save wall time."""
 from __future__ import annotations
 
 import os
 import shutil
-import tempfile
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.ckpt import AsyncCheckpointManager
 from repro.hercule.checkpoint import CheckpointManager
 
-from .common import emit, timeit
+from .common import emit, scratch_dir, timeit
 
 
 def _state(mb: float = 32.0, seed: int = 0):
@@ -24,36 +27,118 @@ def _state(mb: float = 32.0, seed: int = 0):
             "nu": {"w": jnp.abs(mk()) * 1e-4}, "step": jnp.int32(1)}
 
 
-def run(mb: float = 32.0):
-    base = tempfile.mkdtemp(prefix="hx_ckpt_bench_")
+def _drift(state, k: int):
+    """k small SGD-like updates: temporally correlated, delta-friendly."""
+    return jax.tree.map(
+        lambda x: x + k * 1e-5 if x.dtype.kind == "f" else x, state)
+
+
+def _template(state):
+    dev = jax.devices()[0]
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(
+            jnp.shape(x), jnp.result_type(x),
+            sharding=jax.sharding.SingleDeviceSharding(dev)), state)
+
+
+def _assert_bitwise(a, b, what: str) -> None:
+    ok = jax.tree.all(jax.tree.map(
+        lambda x, y: bool(jnp.array_equal(x, y)), a, b))
+    assert ok, f"{what}: restored state is not bit-exact"
+
+
+def _codec_modes(base: str, state, state2, total_mb: float) -> None:
+    """Historical record set: sync save/restore across codec modes."""
+    for mode in ("raw", "delta", "pyramid", "auto"):
+        root = os.path.join(base, mode)
+        mgr = CheckpointManager(root, ncf=4, mode=mode, async_write=False)
+        _, dt1 = timeit(lambda: mgr.save(1, state), reps=1)
+        _, dt2 = timeit(lambda: mgr.save(2, state2), reps=1)
+        nbytes = sum(
+            os.path.getsize(os.path.join(root, "data", f))
+            for f in os.listdir(os.path.join(root, "data")))
+        (restored, _), dtr = timeit(lambda: mgr.restore(_template(state),
+                                                        step=2), reps=1)
+        ok = jax.tree.all(jax.tree.map(
+            lambda a, b: bool(jnp.array_equal(a, b)), restored, state2))
+        mgr.close()
+        emit(f"ckpt.save.{mode}", dt2 * 1e6,
+             f"save1={total_mb/dt1:.0f}MB/s save2={total_mb/dt2:.0f}MB/s "
+             f"stored={nbytes/1e6:.1f}MB of {2*total_mb:.0f}MB "
+             f"ratio={nbytes/(2*total_mb*1e6):.3f} "
+             f"restore={total_mb/dtr:.0f}MB/s bitwise={ok}")
+
+
+def run(mb: float = 32.0, saves: int = 4):
+    base = scratch_dir("hx_ckpt_bench_")
     try:
         state = _state(mb)
-        state2 = jax.tree.map(
-            lambda x: x + 1e-5 if x.dtype.kind == "f" else x, state)
+        state2 = _drift(state, 1)
         total_mb = sum(x.nbytes for x in jax.tree.leaves(state)) / 1e6
-        for mode in ("raw", "delta", "pyramid", "auto"):
-            root = os.path.join(base, mode)
-            mgr = CheckpointManager(root, ncf=4, mode=mode, async_write=False)
-            _, dt1 = timeit(lambda: mgr.save(1, state), reps=1)
-            _, dt2 = timeit(lambda: mgr.save(2, state2), reps=1)
-            nbytes = sum(
-                os.path.getsize(os.path.join(root, "data", f))
-                for f in os.listdir(os.path.join(root, "data")))
-            dev = jax.devices()[0]
-            template = jax.tree.map(
-                lambda x: jax.ShapeDtypeStruct(
-                    jnp.shape(x), jnp.result_type(x),
-                    sharding=jax.sharding.SingleDeviceSharding(dev)), state)
-            (restored, _), dtr = timeit(lambda: mgr.restore(template, step=2),
-                                        reps=1)
-            ok = jax.tree.all(jax.tree.map(
-                lambda a, b: bool(jnp.array_equal(a, b)), restored, state2))
-            mgr.close()
-            emit(f"ckpt.save.{mode}", dt2 * 1e6,
-                 f"save1={total_mb/dt1:.0f}MB/s save2={total_mb/dt2:.0f}MB/s "
-                 f"stored={nbytes/1e6:.1f}MB of {2*total_mb:.0f}MB "
-                 f"ratio={nbytes/(2*total_mb*1e6):.3f} "
-                 f"restore={total_mb/dtr:.0f}MB/s bitwise={ok}")
+        _codec_modes(base, state, state2, total_mb)
+
+        # ---- stall accounting: what the train thread pays per save.
+        # Durability must reach *persistent* storage, so this section
+        # runs on the default tempdir (a real filesystem with a real
+        # fsync), not the tmpfs scratch — on tmpfs a write is just a
+        # memcpy and there is no I/O to hide. Sync = snapshot + encode
+        # + write + fsync inline; async = the donation-safe device-side
+        # snapshot cut only, with fsync+commit behind the lanes (each
+        # save is followed by wait(), so backpressure never pollutes
+        # the stall sample; min-of-N filters scheduler noise).
+        import tempfile
+        disk = tempfile.mkdtemp(prefix="hx_ckpt_stall_")
+        drifted = [_drift(state, i) for i in range(saves)]
+        jax.block_until_ready(drifted)
+        sync = CheckpointManager(os.path.join(disk, "stall_sync"), ncf=4,
+                                 mode="raw", async_write=False)
+        sync_best = float("inf")
+        for i in range(saves):
+            _, dt = timeit(lambda: sync.save(i + 1, drifted[i]), reps=1)
+            sync_best = min(sync_best, dt)
+        sync.close()
+
+        amgr = AsyncCheckpointManager(os.path.join(disk, "stall_async"),
+                                      ncf=4, lane_backend="thread")
+        async_best = float("inf")
+        for i in range(saves):
+            _, dt = timeit(lambda: amgr.save(i + 1, drifted[i]), reps=1)
+            async_best = min(async_best, dt)
+            amgr.wait()
+        restored, _ = amgr.restore(_template(state), step=saves)
+        _assert_bitwise(restored, drifted[saves - 1], "async full")
+        stall_hidden = amgr.stall_seconds_total
+        amgr.close()
+        shutil.rmtree(disk, ignore_errors=True)
+
+        ratio = sync_best / async_best
+        emit("ckpt.stall_sync", sync_best * 1e6,
+             f"{total_mb/sync_best:.0f}MB/s write+fsync inline",
+             repeats=saves)
+        emit("ckpt.stall_async", async_best * 1e6,
+             f"snapshot-only; total_stall={stall_hidden*1e3:.1f}ms "
+             f"over {saves} saves", repeats=saves)
+        emit("ckpt.stall_ratio", ratio,
+             f"sync/async stall; floor=2.0 (async <= 0.5x sync)",
+             unit="x", repeats=saves)
+
+        # ---- delta checkpoints: bytes of a delta context vs its full
+        # rebase, and bit-exact chain restore through the verifier.
+        dmgr = AsyncCheckpointManager(os.path.join(base, "delta"), ncf=4,
+                                      delta_every=8, lane_backend="thread")
+        for i in range(3):
+            dmgr.save(i + 1, _drift(state, i))
+        dmgr.wait()
+        bytes_full = sum(r.nbytes for r in dmgr.db.view(1).records)
+        bytes_delta = sum(r.nbytes for r in dmgr.db.view(3).records)
+        restored, _ = dmgr.restore(_template(state), step=3)
+        _assert_bitwise(restored, _drift(state, 2), "delta chain")
+        dmgr.close()
+        emit("ckpt.delta_bytes_ratio", bytes_delta / bytes_full,
+             f"delta_ctx={bytes_delta/1e6:.1f}MB "
+             f"full_ctx={bytes_full/1e6:.1f}MB chain_restore=bitexact",
+             unit="ratio")
+        return ratio
     finally:
         shutil.rmtree(base, ignore_errors=True)
 

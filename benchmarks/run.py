@@ -21,7 +21,10 @@ import traceback
 from . import common
 
 #: module name -> minimum acceptable ``run()`` return value
-FLOORS = {"bench_api": 5.0}
+FLOORS = {"bench_api": 5.0,
+          # async checkpoint stall must be <= 0.5x the sync save wall
+          # (bench_checkpoint returns sync_stall / async_stall)
+          "bench_checkpoint": 2.0}
 
 #: record name -> maximum acceptable emitted value (checked when the
 #: record exists; an absent record means its module was deselected or

@@ -557,15 +557,22 @@ class CkptShardKind(ObjectKind):
         return view.select(Selector(names=name, kinds=self.name))
 
     def read_region(self, view: ContextView, name: str,
-                    target_slices) -> np.ndarray:
-        """Elastic region read: decode only overlapping source shards."""
+                    target_slices, *, reader=None) -> np.ndarray:
+        """Elastic region read: decode only overlapping source shards.
+
+        ``reader`` overrides the batched record decoder (``fn(records)
+        -> [ndarray]``); the async manager injects a checksum-verifying
+        decode here so integrity checking composes with the elastic
+        intersection logic instead of duplicating it.
+        """
         recs = self.shards(view, name)
         if not recs:
             raise KeyError(
                 f"checkpoint context {view.step} missing tensor {name!r}")
+        read = reader if reader is not None else view.read_records
         gshape = tuple(recs[0].meta["global_shape"])
         if not gshape:  # scalar: a single record, whole payload
-            return view.read_record(recs[0]).reshape(())
+            return read([recs[0]])[0].reshape(())
         out = np.empty([s.stop - s.start for s in target_slices],
                        _dtype_of(recs[0].dtype))
         hits = []
@@ -581,7 +588,7 @@ class CkptShardKind(ObjectKind):
                 inter.append((lo, hi))
             else:
                 hits.append((rec, src, inter))
-        for (rec, src, inter), data in zip(hits, view.read_records(
+        for (rec, src, inter), data in zip(hits, read(
                 [rec for rec, _, _ in hits])):
             dst = tuple(slice(lo - ts.start, hi - ts.start)
                         for (lo, hi), ts in zip(inter, target_slices))
@@ -591,9 +598,35 @@ class CkptShardKind(ObjectKind):
         return out
 
 
+class HProtShardKind(CkptShardKind):
+    """HProt protection shards written by the async checkpoint manager.
+
+    Naming schema: ``ckpt/<pytree key path>`` — an explicit prefix (the
+    sync manager's bare key paths stay on the fallback kind), so HProt
+    records are claimable, selectable and scannable like any other
+    typed object. Same meta contract as :class:`CkptShardKind` plus a
+    per-record ``crc32`` of the stored payload and, for delta-encoded
+    shards, the ``pred_step`` whose record is the temporal predictor
+    (DESIGN.md §16).
+    """
+
+    name = "hprot_shard"
+    prefix = "ckpt/"
+
+    def match(self, record_name: str) -> bool:
+        return record_name.startswith(self.prefix)
+
+    def parse(self, record_name: str) -> dict:
+        return {"tensor": record_name[len(self.prefix):]}
+
+    def record_name(self, tensor: str) -> str:
+        return f"{self.prefix}{tensor}"
+
+
 AMR_TREE = register_kind(AmrTreeKind())
 ANALYSIS = register_kind(AnalysisKind())
 REDUCED = register_kind(ReducedKind())
+HPROT_SHARD = register_kind(HProtShardKind())
 CKPT_SHARD = register_kind(CkptShardKind(), fallback=True)
 
 

@@ -350,6 +350,33 @@ class HerculeDB:
             finally:
                 os.close(fd)
 
+    def commit_context(self, step: int, records, attrs: dict | None = None
+                       ) -> None:
+        """Commit a context manifest for records appended elsewhere.
+
+        The HProt manifest commit protocol (DESIGN.md §16): durability
+        strictly before visibility. Writer lanes appended the payloads
+        and published them to the page cache (``flush_domain(sync=
+        False)``); here exactly the data files the manifest references
+        are fsynced, then the manifest is written to a temp file,
+        fsynced and atomically renamed — a context either commits
+        completely or stays invisible to every reader.
+        """
+        records = list(records)
+        self.fsync_files(r.file for r in records)
+        ctx_dir = self._ctx_dir(step)
+        os.makedirs(ctx_dir, exist_ok=True)
+        manifest = {"step": int(step), "attrs": dict(attrs or {}),
+                    "records": [r.to_json() for r in records]}
+        path = os.path.join(ctx_dir, "MANIFEST.json")
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+        self._invalidate_view(step)
+
     def read_payload(self, rec: Record) -> bytes:
         with open(os.path.join(self.root, "data", rec.file), "rb") as f:
             f.seek(rec.offset)

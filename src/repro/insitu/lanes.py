@@ -37,7 +37,7 @@ from ..hercule.database import DomainWriter, HerculeDB, Record
 from ..obs import metrics as obs_metrics
 from ..obs.trace import TRACER, Tracer, now_us
 from .reducers import ReducerDAG
-from .staging import ShmStagingArea, StagingArea
+from .staging import ShmStagingArea, StagingArea, _CrashSafeCondition
 
 BACKENDS: dict[str, type] = {}
 
@@ -321,7 +321,8 @@ class _PooledLane:
     def __init__(self, ctx, results, index: int):
         self.task_q = ctx.Queue()
         lock = ctx.Lock()
-        self.sync = (lock, ctx.Condition(lock), ctx.Condition(lock))
+        self.sync = (lock, _CrashSafeCondition(lock, ctx),
+                     _CrashSafeCondition(lock, ctx))
         self.proc = ctx.Process(target=_pooled_lane_main,
                                 args=(self.task_q, self.sync, results),
                                 name=f"insitu-pool-lane{index}",

@@ -99,6 +99,71 @@ class StrideController:
         self._integral = max(self._integral, 0.0)
 
 
+#: shared stride-controller state words appended to the ShmStagingArea
+#: control segment: log2(stride), PID integral, previous error — Q31.32
+#: fixed point in int64, with INT64_MIN marking "no sample yet"
+N_CTRL_WORDS = 3
+_CTRL_SCALE = float(1 << 32)
+_CTRL_UNSET = np.iinfo(np.int64).min
+
+
+class SharedStrideController(StrideController):
+    """StrideController whose state lives in shared int64 control words.
+
+    The multi-producer subsample fix (ROADMAP carried-over item): every
+    process bound to a :class:`ShmStagingArea` — the creating producer
+    and each :meth:`ShmStagingArea.attach` side — views the *same*
+    three state words, so the decimation stride converges once for the
+    whole producer fleet instead of independently per process (which
+    made survivors unevenly spaced and double-corrected shared queue
+    depth). All mutations happen inside ``_push`` under the area's
+    cross-process lock; construction never resets the words, so an
+    attaching producer adopts whatever stride the fleet has already
+    converged to.
+    """
+
+    def __init__(self, capacity: int, words, *, setpoint: float = 0.5,
+                 kp: float = 0.03, ki: float = 0.0, kd: float = 0.5):
+        self._w = words
+        self.capacity = max(1, int(capacity))
+        self.setpoint = setpoint
+        self.kp, self.ki, self.kd = kp, ki, kd
+
+    @property
+    def _log(self) -> float:
+        return float(self._w[0]) / _CTRL_SCALE
+
+    @_log.setter
+    def _log(self, v: float) -> None:
+        self._w[0] = int(round(v * _CTRL_SCALE))
+
+    @property
+    def _integral(self) -> float:
+        return float(self._w[1]) / _CTRL_SCALE
+
+    @_integral.setter
+    def _integral(self, v: float) -> None:
+        self._w[1] = int(round(v * _CTRL_SCALE))
+
+    @property
+    def _prev(self) -> float | None:
+        w = int(self._w[2])
+        return None if w == _CTRL_UNSET else w / _CTRL_SCALE
+
+    @_prev.setter
+    def _prev(self, v: float | None) -> None:
+        self._w[2] = _CTRL_UNSET if v is None \
+            else int(round(v * _CTRL_SCALE))
+
+    def freeze(self) -> StrideController:
+        """Plain host-side copy (survives segment detach/unlink)."""
+        plain = StrideController(self.capacity, setpoint=self.setpoint,
+                                 kp=self.kp, ki=self.ki, kd=self.kd)
+        plain._log, plain._integral = self._log, self._integral
+        plain._prev = self._prev
+        return plain
+
+
 def to_host(arrays: dict) -> dict[str, np.ndarray]:
     """Materialize a dict of arrays (jax or numpy) on the host, no copy."""
     return {k: np.asarray(v) for k, v in arrays.items()}
@@ -421,6 +486,9 @@ class StagingArea:
 #       (STAT_FIELDS order, block_seconds as integer ns): producer and
 #       consumer mutate the same words under the lock, so stats() is
 #       truthful from either side of the process boundary
+#     [4+6n+N_STAT_WORDS .. +N_CTRL_WORDS)  SharedStrideController state
+#       (log2-stride, integral, prev-error as Q31.32 fixed point) —
+#       every bound producer shares one subsample policy
 #
 #   one data segment per slot, resized (new generation) when a snapshot
 #   outgrows it — steady-state pushes reuse the mapping, the
@@ -468,6 +536,42 @@ def _attach_shm(name: str, untrack: bool = False):
     return shared_memory.SharedMemory(name=name)
 
 
+class _CrashSafeCondition:
+    """Condition-shaped wakeup channel a SIGKILLed waiter cannot poison.
+
+    ``multiprocessing.Condition.notify`` blocks on a ``_woken_count``
+    handshake: after releasing a sleeper it waits for that sleeper to
+    acknowledge. A lane killed with SIGKILL while parked in ``wait()``
+    never acknowledges, so the *notifier* — the parent, holding the
+    area lock — hangs forever (and everyone behind the lock with it).
+    This wrapper keeps Condition's call shape (wait under the lock,
+    notify/notify_all) but signals through a bare semaphore whose
+    ``release`` can never block. The trade: no exact-wakeup accounting
+    — a notify with no waiter leaves a stale token (one future
+    spurious wakeup), and notify_all releases a fixed burst. Both are
+    harmless here because every wait site loops on its predicate with
+    a bounded timeout.
+    """
+
+    def __init__(self, lock, ctx):
+        self._lock = lock
+        self._sem = ctx.Semaphore(0)
+
+    def wait(self, timeout: float | None = None) -> bool:
+        self._lock.release()
+        try:
+            return self._sem.acquire(True, timeout)
+        finally:
+            self._lock.acquire()
+
+    def notify(self, n: int = 1) -> None:
+        for _ in range(n):
+            self._sem.release()
+
+    def notify_all(self) -> None:
+        self.notify(16)
+
+
 @dataclasses.dataclass
 class ShmHandle:
     """Picklable attach spec for a lane process (see ShmStagingArea)."""
@@ -508,7 +612,8 @@ class ShmStagingArea:
         ctx = mp_context or multiprocessing.get_context("spawn")
         self._uid = f"hx{os.getpid():x}_{os.urandom(4).hex()}"
         self._shm = shared_memory.SharedMemory(
-            create=True, size=(4 + 6 * n + N_STAT_WORDS) * 8,
+            create=True,
+            size=(4 + 6 * n + N_STAT_WORDS + N_CTRL_WORDS) * 8,
             name=f"{self._uid}ctl")
         if sync is not None:
             # externally owned primitives (the persistent lane pool:
@@ -517,31 +622,40 @@ class ShmStagingArea:
             self._lock, self._not_empty, self._not_full = sync
         else:
             self._lock = ctx.Lock()
-            self._not_empty = ctx.Condition(self._lock)
-            self._not_full = ctx.Condition(self._lock)
+            self._not_empty = _CrashSafeCondition(self._lock, ctx)
+            self._not_full = _CrashSafeCondition(self._lock, ctx)
         self._bind(self._shm, n)
         self._words[:] = 0
         self._words[3] = n
+        self._ctrl._prev = None   # restore the "no sample yet" sentinel
         #: producer-side segment cache: slot -> (gen, SharedMemory)
         self._segs: dict[int, tuple[int, object]] = {}
-        self._ctrl = StrideController(capacity)
         self._consumer = False
         self._untrack = False
 
     @property
     def stride(self) -> int:
-        """Current subsample decimation stride (1 = accept every step)."""
+        """Current subsample decimation stride (1 = accept every step).
+
+        Shared across every bound producer: the controller state lives
+        in the segment's control words (:class:`SharedStrideController`).
+        """
         return self._ctrl.stride
 
     def _bind(self, ctrl, n: int) -> None:
         self.n_slots = n
-        self._words = np.ndarray((4 + 6 * n + N_STAT_WORDS,), np.int64,
-                                 buffer=ctrl.buf)
+        self._words = np.ndarray(
+            (4 + 6 * n + N_STAT_WORDS + N_CTRL_WORDS,), np.int64,
+            buffer=ctrl.buf)
         self._ring = self._words[4:4 + n]
         self._state = self._words[4 + n:4 + 2 * n]
         self._meta = self._words[4 + 2 * n:4 + 6 * n].reshape(n, 4)
         # both ends mutate the same counters (under the shared lock)
-        self.stats = _ShmStats(self._words[4 + 6 * n:])
+        self.stats = _ShmStats(
+            self._words[4 + 6 * n:4 + 6 * n + N_STAT_WORDS])
+        # ... and the same subsample-stride state (multi-producer policy)
+        self._ctrl = SharedStrideController(
+            self.capacity, self._words[4 + 6 * n + N_STAT_WORDS:])
 
     # ---------------------------------------------------------- handle
     def handle(self) -> ShmHandle:
@@ -824,8 +938,9 @@ class ShmStagingArea:
             self._close_seg(seg)
         self._segs.clear()
         # drop numpy views before closing the mapping they alias; stats
-        # stay readable afterwards as a frozen host-side copy
+        # and stride state stay readable as frozen host-side copies
         self.stats = self.stats.freeze()
+        self._ctrl = self._ctrl.freeze()
         self._words = self._ring = self._state = self._meta = None
         self._close_seg(self._shm)
 
@@ -842,6 +957,7 @@ class ShmStagingArea:
             seg.unlink()
         self._segs.clear()
         self.stats = self.stats.freeze()
+        self._ctrl = self._ctrl.freeze()
         self._words = self._ring = self._state = self._meta = None
         self._close_seg(self._shm)
         self._shm.unlink()

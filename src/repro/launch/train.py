@@ -27,6 +27,17 @@ def main(argv=None):
     p.add_argument("--ckpt-every", type=int, default=50)
     p.add_argument("--ckpt-mode", default="raw",
                    choices=["raw", "delta", "pyramid", "auto"])
+    p.add_argument("--ckpt-async", action="store_true",
+                   help="HProt async checkpointing: device-side snapshot "
+                        "only on the train thread; encode/write/fsync "
+                        "behind staged writer lanes")
+    p.add_argument("--ckpt-delta-every", type=int, default=0, metavar="K",
+                   help="with --ckpt-async: K incremental delta "
+                        "checkpoints between full rebases (0 = always full)")
+    p.add_argument("--ckpt-lane-backend", default="thread",
+                   choices=["thread", "process"],
+                   help="async checkpoint writer lanes: in-process "
+                        "threads, or one OS process per contributor group")
     p.add_argument("--ncf", type=int, default=8,
                    help="Hercule contributors per file")
     p.add_argument("--hdep-dir", default=None)
@@ -62,6 +73,9 @@ def main(argv=None):
                             global_batch=args.global_batch, seed=args.seed),
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
         ckpt_mode=args.ckpt_mode, ncf=args.ncf,
+        ckpt_async=args.ckpt_async,
+        ckpt_delta_every=args.ckpt_delta_every,
+        ckpt_lane_backend=args.ckpt_lane_backend,
         hdep_dir=args.hdep_dir, hdep_every=args.hdep_every,
         insitu_dir=args.insitu_dir, insitu_every=args.insitu_every,
         insitu_policy=args.insitu_policy,

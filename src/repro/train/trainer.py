@@ -55,6 +55,8 @@ class Trainer:
                  data_cfg: DataConfig | None = None,
                  ckpt_dir: str = "/tmp/hx_ckpt", ckpt_every: int = 50,
                  ckpt_mode: str = "raw", ncf: int = 8,
+                 ckpt_async: bool = False, ckpt_delta_every: int = 0,
+                 ckpt_lane_backend: str = "thread",
                  seed: int = 0, log_every: int = 10,
                  hdep_dir: str | None = None, hdep_every: int = 0,
                  insitu_dir: str | None = None, insitu_every: int = 0,
@@ -68,7 +70,16 @@ class Trainer:
         self.data_cfg = data_cfg or DataConfig(
             vocab_size=lm.cfg.vocab_size, seq_len=256, global_batch=8, seed=seed)
         self.pipeline = TokenPipeline(self.data_cfg)
-        self.ckpt = CheckpointManager(ckpt_dir, ncf=ncf, mode=ckpt_mode)
+        if ckpt_async:
+            # HProt flow: device-side snapshot is the only train-thread
+            # cost; encode/write/fsync run behind staged writer lanes,
+            # with optional delta checkpoints every K saves (DESIGN.md §16)
+            from ..ckpt import AsyncCheckpointManager
+            self.ckpt = AsyncCheckpointManager(
+                ckpt_dir, ncf=ncf, delta_every=ckpt_delta_every,
+                lane_backend=ckpt_lane_backend)
+        else:
+            self.ckpt = CheckpointManager(ckpt_dir, ncf=ncf, mode=ckpt_mode)
         self.ckpt_every = ckpt_every
         self.log_every = log_every
         self.hdep_every = hdep_every

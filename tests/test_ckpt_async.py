@@ -1,0 +1,280 @@
+"""HProt async checkpoint subsystem (repro.ckpt): parity, delta chains,
+integrity verification, crash recovery, lane failure, elastic restore."""
+import os
+import signal
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import (AsyncCheckpointManager, CorruptShardError,
+                        latest_complete_step)
+from repro.hercule.checkpoint import CheckpointManager
+from repro.hercule.database import HerculeDB
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _state(step: int):
+    """Deterministic, temporally correlated state (recomputable anywhere)."""
+    base = np.arange(96 * 32, dtype=np.float32).reshape(96, 32) / 977.0
+    return {"params": {"w": jnp.asarray(base * (1.0 + step / 100.0)),
+                       "b": jnp.asarray(np.full(32, step, np.float32))},
+            "mu": {"w": jnp.asarray(base * 0.01 * step)},
+            "step": jnp.int32(step)}
+
+
+def _template(state):
+    dev = jax.devices()[0]
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(
+            jnp.shape(x), jnp.result_type(x),
+            sharding=jax.sharding.SingleDeviceSharding(dev)), state)
+
+
+def _assert_tree_equal(got, want, ctx=""):
+    flat_g = jax.tree_util.tree_flatten_with_path(got)[0]
+    flat_w = jax.tree_util.tree_flatten_with_path(want)[0]
+    assert len(flat_g) == len(flat_w)
+    for (pg, a), (pw, b) in zip(flat_g, flat_w):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"{ctx}{pg}")
+
+
+@pytest.mark.parametrize("backend", ["thread", "process"])
+def test_async_matches_sync_restore(tmp_path, backend):
+    """Full async checkpoint restores to the same bytes as a sync one."""
+    state = _state(3)
+    sync = CheckpointManager(str(tmp_path / "sync"), ncf=2,
+                             async_write=False)
+    sync.save(1, state)
+    got_sync, _ = sync.restore(_template(state), step=1)
+    sync.close()
+
+    amgr = AsyncCheckpointManager(str(tmp_path / "async"), ncf=2,
+                                  lane_backend=backend)
+    amgr.save(1, state, attrs={"tag": "parity"})
+    amgr.wait()
+    got_async, attrs = amgr.restore(_template(state), step=1)
+    amgr.close()
+
+    assert attrs["tag"] == "parity" and attrs["mode"] == "full"
+    _assert_tree_equal(got_async, got_sync, "async-vs-sync ")
+    _assert_tree_equal(got_async, state, "async-vs-source ")
+
+
+def test_delta_chain_bitexact_across_rebase(tmp_path):
+    """K=2 deltas restore bit-exactly, including across the full rebase."""
+    m = AsyncCheckpointManager(str(tmp_path / "d"), ncf=2, delta_every=2)
+    for s in range(1, 6):
+        m.save(s, _state(s))
+    m.wait()
+    # cycle: 1 full, 2-3 delta, 4 full rebase, 5 delta
+    modes = {s: m.db.view(s).attrs["mode"] for s in range(1, 6)}
+    assert modes == {1: "full", 2: "delta", 3: "delta", 4: "full",
+                     5: "delta"}, modes
+    w3 = m.db.view(3).record(0, "ckpt/['params']['w']")
+    assert w3.codec == "fpdelta-delta" and int(w3.meta["pred_step"]) == 2
+    assert "crc32" in w3.meta
+    tpl = _template(_state(1))
+    for s in range(1, 6):    # every step, either side of the rebase
+        got, _ = m.restore(tpl, step=s)
+        _assert_tree_equal(got, _state(s), f"step {s} ")
+    m.close()
+
+
+def test_corrupt_shard_raises(tmp_path):
+    m = AsyncCheckpointManager(str(tmp_path / "c"), ncf=2)
+    m.save(1, _state(1))
+    m.wait()
+    rec = m.db.view(1).record(0, "ckpt/['params']['w']")
+    path = os.path.join(m.db.root, "data", rec.file)
+    with open(path, "r+b") as f:    # flip one payload byte
+        f.seek(rec.offset + rec.nbytes // 2)
+        b = f.read(1)
+        f.seek(-1, os.SEEK_CUR)
+        f.write(bytes([b[0] ^ 0xFF]))
+    with pytest.raises(CorruptShardError, match="CRC32"):
+        m.restore(_template(_state(1)), step=1)
+    m.close()
+
+
+def test_latest_step_skips_incomplete(tmp_path):
+    """A manifest referencing truncated/missing data loses latest_step."""
+    m = AsyncCheckpointManager(str(tmp_path / "t"), ncf=2)
+    for s in (1, 2):
+        m.save(s, _state(s))
+    m.wait()
+    assert m.latest_step() == 2
+    # truncate the file holding step 2's records below a record extent
+    recs = [r for r in m.db.view(2).records]
+    path = os.path.join(m.db.root, "data", recs[-1].file)
+    with open(path, "r+b") as f:
+        f.truncate(recs[-1].offset + recs[-1].nbytes - 1)
+    m.db._invalidate_view(2)
+    assert m.latest_step() == 1      # newest *complete* step wins
+    got, _ = m.restore(_template(_state(1)))
+    _assert_tree_equal(got, _state(1))
+    m.close()
+
+
+def test_lane_crash_no_manifest_no_deadlock(tmp_path):
+    """A dying writer lane surfaces as an error, leaves no manifest for
+    the in-flight step, and never deadlocks wait()."""
+    m = AsyncCheckpointManager(str(tmp_path / "k"), ncf=2,
+                               lane_backend="process")
+    m.save(1, _state(1))
+    m.wait()                          # lane exists and step 1 committed
+    [proc] = m._backend._procs.values()
+    os.kill(proc.pid, signal.SIGKILL)
+    proc.join(timeout=10)
+    m.save(2, _state(2))
+    with pytest.raises(RuntimeError, match="lane"):
+        m.wait(timeout=60)
+    assert not os.path.exists(
+        os.path.join(m.db.root, "ctx_00000002", "MANIFEST.json"))
+    assert latest_complete_step(m.db) == 1
+    m.close()
+
+
+_KILL_SNIPPET = """
+import os
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import sys; sys.path.insert(0, {src!r})
+from test_ckpt_async import _state
+from repro.ckpt import AsyncCheckpointManager
+
+m = AsyncCheckpointManager({root!r}, ncf=2, delta_every=2)
+for s in (1, 2):
+    m.save(s, _state(s))
+m.wait()
+m.save(3, _state(3))     # still staging/writing when we die
+print("SAVED", flush=True)
+os._exit(17)
+"""
+
+
+def test_kill_mid_save_recovers_previous_step(tmp_path):
+    """Killing the process mid-checkpoint leaves a restorable database:
+    either step 3 committed in time, or recovery lands on step 2 —
+    never a torn manifest, never garbage."""
+    root = str(tmp_path / "kill")
+    out = subprocess.run(
+        [sys.executable, "-c",
+         _KILL_SNIPPET.format(src=SRC, root=root)],
+        env={**os.environ, "PYTHONPATH":
+             SRC + os.pathsep + os.path.dirname(__file__)},
+        cwd=os.path.dirname(__file__),
+        capture_output=True, text=True, timeout=300)
+    assert out.returncode == 17, (out.returncode, out.stderr[-3000:])
+    db = HerculeDB.open(root)
+    latest = latest_complete_step(db)
+    assert latest in (2, 3), latest
+    db.close()
+    m = AsyncCheckpointManager(root, ncf=2)    # reopen like a restart
+    got, _ = m.restore(_template(_state(latest)), step=latest)
+    _assert_tree_equal(got, _state(latest), f"recovered step {latest} ")
+    m.close()
+
+
+_ELASTIC_SAVE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.ckpt import AsyncCheckpointManager
+
+mesh = Mesh(np.array(jax.devices()).reshape(4), ("d",))
+sh = NamedSharding(mesh, P("d"))
+state = {{
+    "w": jax.device_put(jnp.arange(64 * 8, dtype=jnp.float32
+                                   ).reshape(64, 8), sh),
+    "b": jax.device_put(jnp.arange(128, dtype=jnp.float32) / 128.0, sh),
+    "step": jnp.int32(7),
+}}
+m = AsyncCheckpointManager({root!r}, ncf=2)
+m.save(1, state)
+m.wait()
+n = len(m.db.view(1).records_named("ckpt/['w']"))
+m.close()
+print("SAVED", n)
+"""
+
+_ELASTIC_RESTORE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.ckpt import AsyncCheckpointManager
+
+mesh = Mesh(np.array(jax.devices()).reshape(2), ("d",))
+sh = NamedSharding(mesh, P("d"))
+template = {{
+    "w": jax.ShapeDtypeStruct((64, 8), jnp.float32, sharding=sh),
+    "b": jax.ShapeDtypeStruct((128,), jnp.float32, sharding=sh),
+    "step": jax.ShapeDtypeStruct((), jnp.int32,
+        sharding=jax.sharding.SingleDeviceSharding(jax.devices()[0])),
+}}
+m = AsyncCheckpointManager({root!r}, ncf=2)
+got, _ = m.restore(template, step=1)
+assert got["w"].sharding.num_devices == 2, got["w"].sharding
+np.testing.assert_array_equal(
+    np.asarray(got["w"]),
+    np.arange(64 * 8, dtype=np.float32).reshape(64, 8))
+np.testing.assert_array_equal(
+    np.asarray(got["b"]), np.arange(128, dtype=np.float32) / 128.0)
+assert int(got["step"]) == 7
+m.close()
+print("RESTORED-OK")
+"""
+
+
+def test_elastic_restore_through_async_manager(tmp_path):
+    """4-way sharded async save restores onto a 2-device mesh."""
+    root = str(tmp_path / "elastic")
+
+    def run(code):
+        return subprocess.run([sys.executable, "-c", code],
+                              env={**os.environ, "PYTHONPATH": SRC},
+                              capture_output=True, text=True, timeout=300)
+
+    out = run(_ELASTIC_SAVE.format(root=root))
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "SAVED 4" in out.stdout, out.stdout   # ownership pruning held
+    out = run(_ELASTIC_RESTORE.format(root=root))
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "RESTORED-OK" in out.stdout
+
+
+def test_stall_and_metrics_accounting(tmp_path):
+    """Spans + metrics cover the save pipeline; stall total accumulates."""
+    from repro.obs import TRACER
+    TRACER.enable()
+    TRACER.clear()
+    try:
+        m = AsyncCheckpointManager(str(tmp_path / "m"), ncf=2,
+                                   delta_every=2)
+        for s in (1, 2):
+            m.save(s, _state(s))
+        m.wait()
+        assert m.stall_seconds_total > 0.0
+        t = m.telemetry()
+        assert t["committed"] == 2 and t["pending"] == 0
+        snap = m.obs.snapshot()
+        assert snap["ckpt_stall_seconds"]["samples"][0]["value"]["count"] == 2
+        assert snap["ckpt_records_total"]["samples"][0]["value"] == 8
+        modes = {s["labels"]["mode"]: s["value"]
+                 for s in snap["ckpt_saves_total"]["samples"]}
+        assert modes == {"full": 1.0, "delta": 1.0}
+        m.close()
+        names = {s["name"] for s in TRACER.spans()}
+        assert {"ckpt.snapshot", "ckpt.stage", "ckpt.write",
+                "ckpt.commit"} <= names, names
+    finally:
+        TRACER.disable()
+        TRACER.clear()

@@ -167,6 +167,40 @@ def test_shm_slab_reclamation_on_release_and_close():
             _attach_shm(name)
 
 
+def test_shm_shared_stride_controller_multi_producer():
+    """Subsample stride state lives in the segment's control words: every
+    bound producer sees one consistent stride, and overflow driven from
+    one binding moves the stride observed through another."""
+    from repro.insitu.staging import SharedStrideController
+
+    area = ShmStagingArea(capacity=2, policy="subsample", n_slots=3)
+    peer = ShmStagingArea.attach(area.handle())
+    assert isinstance(area._ctrl, SharedStrideController)
+    assert area.stride == 1 and peer.stride == 1
+
+    # sustained overflow through the *peer* binding raises the stride
+    # the owner observes (one shared controller, not one per producer)
+    for _ in range(64):
+        peer._ctrl.overflow()
+    assert peer.stride > 1
+    assert area.stride == peer.stride
+
+    # the shared decision function gates pushes identically on both ends
+    stride = area.stride
+    accepted = sum(bool(area.push(s, {"a": np.zeros(4)}))
+                   for s in range(stride * 2))
+    assert accepted == 2          # one admit per stride cycle, 2 cycles
+
+    # freeze() on detach keeps a coherent host-side copy after unlink
+    peer.detach()
+    assert peer.stride == stride
+    while len(area):
+        area.release(area.pop(timeout=1.0))
+    area.close()
+    area.unlink()
+    assert area.stride == stride  # frozen plain controller survives
+
+
 def test_shm_area_policies_match_thread_semantics():
     """drop-oldest keeps the freshest snapshots; victims fire on_evict."""
     evicted = []
