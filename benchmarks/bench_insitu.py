@@ -416,6 +416,120 @@ def run_obs_overhead() -> float:
     return pct
 
 
+# ------------------------------------------------------- serving mode
+
+SERVE_VIEWERS = 64
+
+
+def run_serve(n_viewers: int = SERVE_VIEWERS) -> float:
+    """Concurrent-viewer serving: coalescing ratio, sustained QPS, p99.
+
+    The paper's many-viewers scenario at benchmark scale. Arm one is
+    the uncoalesced path the issue names — every request pays its own
+    decode+merge (a no-cache catalog: the LRU only helps once an
+    object is *warm*, and on a cold storm concurrent misses race past
+    it nondeterministically). Arm two routes the same storm through
+    ``ServeEngine.fetch`` over a cold cache: single-flight coalescing
+    collapses the herd onto one backend read, deterministically. Their
+    read-count ratio is ``insitu.serve_coalesce_ratio_c64`` (CI floor:
+    5x; acceptance: ≥5x at 64 viewers).
+
+    The HTTP leg then measures end-to-end serving through
+    ``CatalogServer`` + ``RemoteCatalog`` — ``insitu.serve_qps``
+    (sustained, warm cache: the dashboard steady state) and
+    ``insitu.serve_p99_ms`` (per-request wall time incl. connection
+    setup) at the same concurrency.
+    """
+    import threading
+
+    from repro.insitu import CatalogServer, RemoteCatalog, ServeEngine
+
+    tree, _, _ = orion_domains(4)
+    root = scratch_dir("hx_bench_serve_")
+    eng = InTransitEngine(root, _live_reducers(), domains=2,
+                          policy="block", queue_capacity=4).start()
+    eng.submit(1, tree)
+    eng.drain(timeout=300.0)
+    eng.close()
+
+    def storm(call):
+        bar = threading.Barrier(n_viewers)
+        errs = []
+
+        def go(i):
+            bar.wait()
+            try:
+                call(i)
+            except Exception as exc:        # noqa: BLE001 — surfaced below
+                errs.append(exc)
+        ts = [threading.Thread(target=go, args=(i,))
+              for i in range(n_viewers)]
+        t0 = time.perf_counter()
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        if errs:
+            raise RuntimeError(f"serve storm errors: {errs[:3]}")
+        return time.perf_counter() - t0
+
+    cat = Catalog(root)
+    name = cat.reducers(1)[0]
+
+    # -- arm 1: per-request decode+merge -> n_viewers reads
+    uncached = Catalog(root, cache_entries=0)
+    t_direct = storm(lambda i: uncached.query(1, name))
+    reads_direct = uncached.cache_info()["misses"]
+    uncached.close()
+
+    # -- arm 2: the same herd through the serving engine -> 1 read
+    cat.clear_cache()
+    serve = ServeEngine(cat, workers=4)
+    t_engine = storm(lambda i: serve.fetch(1, name, client=f"v{i}"))
+    st = serve.stats()
+    serve.close()
+    reads_engine = max(1, st["backend_reads"])
+    ratio = reads_direct / reads_engine
+    emit("insitu.serve_coalesce_ratio_c64", ratio,
+         f"{reads_direct} direct reads vs {reads_engine} coalesced "
+         f"({st['coalesced']} joined flights, {st['cache_serves']} "
+         f"cache-served) at {n_viewers} viewers; "
+         f"storm {t_direct*1e3:.0f}ms -> {t_engine*1e3:.0f}ms "
+         f"(floor 5x)", unit="x")
+
+    # -- HTTP leg: sustained QPS + p99 at the same concurrency
+    srv = CatalogServer(cat, port=0).start()
+    lat: list[float] = []
+    lock = threading.Lock()
+    per_viewer = 8
+    regions = [None, ((0, 128), (0, 128)), ((64, 192), (64, 192))]
+    RemoteCatalog(srv.url).query(1, name)   # warm the server cache
+
+    def viewer(i):
+        rc = RemoteCatalog(srv.url, client_id=f"v{i}")
+        mine = []
+        for q in range(per_viewer):
+            t0 = time.perf_counter()
+            rc.query(1, name, region=regions[(i + q) % len(regions)])
+            mine.append(time.perf_counter() - t0)
+        with lock:
+            lat.extend(mine)
+
+    elapsed = storm(viewer)
+    srv.close()
+    cat.close()
+    shutil.rmtree(root, ignore_errors=True)
+    qps = len(lat) / elapsed
+    p99 = float(np.percentile(np.asarray(lat) * 1e3, 99))
+    emit("insitu.serve_qps", qps,
+         f"{len(lat)} requests over {n_viewers} viewers in "
+         f"{elapsed:.2f}s, warm cache, region mix", unit="qps")
+    emit("insitu.serve_p99_ms", p99,
+         f"p50={np.percentile(np.asarray(lat)*1e3, 50):.1f}ms "
+         f"mean={np.mean(lat)*1e3:.1f}ms", unit="ms")
+    return ratio
+
+
 # ------------------------------------------------- single-writer mode
 
 def _compute_step(tree):
@@ -440,6 +554,9 @@ def run(n_domains: int = 16, steps: int = 8):
 
     # -------- telemetry overhead: instrumented vs bare, same engine
     run_obs_overhead()
+
+    # -------- concurrent-viewer serving: coalescing, QPS, p99
+    run_serve()
 
     # ---------------- compute loop, engine OFF
     t0 = time.perf_counter()

@@ -13,9 +13,9 @@ code is non-zero only for unusable inputs, or with ``--strict`` when a
 warning fired (for local use).
 
 Record semantics: values are costs (µs per call & friends) — higher is
-worse — except ``unit`` values ending in ``x``/``ratio``/``speedup``,
-which are benefits — lower is worse. Records present on only one side
-are listed as added/removed, never warned.
+worse — except ``unit`` values ending in ``x``/``ratio``/``speedup``/
+``qps``, which are benefits — lower is worse. Records present on only
+one side are listed as added/removed, never warned.
 """
 from __future__ import annotations
 
@@ -23,7 +23,7 @@ import argparse
 import json
 import sys
 
-BENEFIT_UNITS = ("x", "ratio", "speedup")
+BENEFIT_UNITS = ("x", "ratio", "speedup", "qps")
 
 
 def load_records(path: str) -> dict[str, dict]:

@@ -31,6 +31,11 @@ FLOORS = {"bench_api": 5.0,
 #: already failed with a traceback)
 CEILINGS = {"insitu.obs_overhead_pct": 2.0}
 
+#: record name -> minimum acceptable emitted value, same existence
+#: semantics as CEILINGS (today: the serving engine must coalesce a
+#: 64-viewer herd down by at least 5x vs per-request decode+merge)
+RECORD_FLOORS = {"insitu.serve_coalesce_ratio_c64": 5.0}
+
 
 def _modules():
     from . import (bench_api, bench_boolcodec, bench_checkpoint,
@@ -83,7 +88,7 @@ def main(argv=None) -> int:
             if not ok:
                 failures.append(f"{name}<floor {floor}")
 
-    ceilings = {}
+    ceilings, record_floors = {}, {}
     by_name = {r["name"]: r for r in common.RECORDS}
     for rname, cap in CEILINGS.items():
         rec = by_name.get(rname)
@@ -94,6 +99,15 @@ def main(argv=None) -> int:
                            "ok": ok}
         if not ok:
             failures.append(f"{rname}>ceiling {cap}")
+    for rname, floor in RECORD_FLOORS.items():
+        rec = by_name.get(rname)
+        if rec is None:
+            continue
+        ok = float(rec["value"]) >= floor
+        record_floors[rname] = {"floor": floor,
+                                "value": float(rec["value"]), "ok": ok}
+        if not ok:
+            failures.append(f"{rname}<floor {floor}")
 
     if args.json:
         payload = {
@@ -102,6 +116,7 @@ def main(argv=None) -> int:
             "platform": platform.platform(),
             "records": common.RECORDS,
             "floors": floors,
+            "record_floors": record_floors,
             "ceilings": ceilings,
             "failures": failures,
         }

@@ -146,6 +146,20 @@ class Catalog:
             return dict(full)
         return _crop(full, region)
 
+    def peek(self, step: int, reducer: str, domain: int | None = None
+             ) -> bool:
+        """True when the full object is already in the LRU cache.
+
+        A cache probe, not a fetch: the serving engine
+        (:mod:`repro.insitu.serve`) uses it to let cached objects bypass
+        admission control — a hot viewer polling an object the server
+        already holds must not be 429'd just because the *backend read*
+        queue is saturated. Does not touch hit/miss counters or LRU
+        order.
+        """
+        with self._lock:
+            return (step, reducer, domain) in self._cache
+
     def series(self, reducer: str, name: str, *,
                steps: list[int] | None = None) -> tuple[np.ndarray, list]:
         """(steps, values) time series of one array across contexts.

@@ -31,6 +31,7 @@ Endpoints (JSON unless framed):
     GET /v1/attrs?step=S                     context attrs
     GET /v1/domains?step=S&reducer=R         contributing domains
     GET /v1/query?step=S&reducer=R[&domain=D][&region=a:b,c:d]   framed
+        [&progressive=1]  -> chunked coarse-first hx-frame stream
     GET /v1/series?reducer=R&name=N[&steps=s1,s2]                framed
     GET /v1/stats                            cache + request telemetry
     GET /metrics                             Prometheus text exposition
@@ -46,6 +47,7 @@ import hashlib
 import hmac
 import json
 import os
+import queue
 import struct
 import threading
 import time
@@ -59,6 +61,8 @@ import numpy as np
 from ..hercule.database import Record, get_codec
 from ..obs import metrics as obs_metrics
 from .catalog import Catalog, _hist_digest, _normalize_region
+from .serve import (ProgressiveAssembler, ServeEngine, ServeOverloaded,
+                    plan_progressive)
 
 FRAME_MAGIC = b"HXF1"
 FRAME_SCHEMA = "hx-frame/1"
@@ -110,6 +114,31 @@ def unpack_frame(data: bytes) -> dict[str, np.ndarray]:
     return out
 
 
+def _read_exact(fp, n: int) -> bytes:
+    """Read exactly ``n`` bytes from a file-like (chunk-decoded) stream."""
+    parts, got = [], 0
+    while got < n:
+        chunk = fp.read(n - got)
+        if not chunk:
+            raise ValueError(
+                f"progressive stream truncated: wanted {n}, got {got}")
+        parts.append(chunk)
+        got += len(chunk)
+    return b"".join(parts)
+
+
+def _read_wire_frame(fp) -> bytes:
+    """Read one complete hx-frame/1 message off a streaming response."""
+    head = _read_exact(fp, 8)
+    if head[:4] != FRAME_MAGIC:
+        raise ValueError("not an hx-frame/1 stream")
+    (hlen,) = struct.unpack_from("<I", head, 4)
+    header = _read_exact(fp, hlen)
+    nbytes = sum(d["nbytes"]
+                 for d in json.loads(header.decode())["arrays"])
+    return head + header + _read_exact(fp, nbytes)
+
+
 def _parse_region(spec: str):
     """``"8:24,0:16"`` -> ((8, 24), (0, 16))."""
     return tuple(tuple(int(x) for x in part.split(":"))
@@ -121,6 +150,81 @@ def _format_region(region) -> str:
 
 
 # ----------------------------------------------------------------- server
+
+class _PooledHTTPServer(ThreadingHTTPServer):
+    """HTTP server with a *bounded* connection-worker pool.
+
+    ``ThreadingHTTPServer`` spawns one OS thread per connection — under
+    a viewer storm the OS scheduler, not the serving engine, becomes
+    the backstop. Here accepted connections land on a queue drained by
+    ``max_connections`` long-lived daemon workers: concurrency is capped
+    by configuration, excess connections simply wait their turn (the
+    engine's admission control 429s *work* overload long before the
+    connection cap matters), and saturation is observable
+    (``server_conn_active`` gauge, ``server_conn_saturation_total``
+    counter) instead of showing up as thread-count growth.
+    """
+
+    def __init__(self, addr, handler, *, max_connections: int = 32,
+                 obs: obs_metrics.MetricsRegistry | None = None):
+        self.max_connections = max(1, int(max_connections))
+        # socketserver's default listen backlog is 5: a viewer-storm
+        # connection burst overflows it, dropped SYNs retransmit after
+        # 1s, and tail latency jumps by whole seconds. Queue the burst
+        # here instead — the workers drain it in arrival order.
+        self.request_queue_size = max(128, 4 * self.max_connections)
+        super().__init__(addr, handler)
+        self._conn_q: queue.SimpleQueue = queue.SimpleQueue()
+        self._active_lock = threading.Lock()
+        self._active = 0
+        self._m_saturated = None
+        if obs is not None:
+            self._m_saturated = obs.counter(
+                "server_conn_saturation_total",
+                "connections queued because every worker was busy")
+            obs.gauge("server_conn_active",
+                      "connection workers currently handling a request"
+                      ).set_function(lambda: self._active)
+            obs.gauge("server_conn_pool_size",
+                      "configured connection-worker cap"
+                      ).set(self.max_connections)
+        self._conn_threads = [
+            threading.Thread(target=self._conn_worker, daemon=True,
+                             name=f"hx-conn-{i}")
+            for i in range(self.max_connections)]
+        for t in self._conn_threads:
+            t.start()
+
+    def process_request(self, request, client_address):
+        if self._m_saturated is not None and obs_metrics.ENABLED:
+            with self._active_lock:
+                saturated = self._active >= self.max_connections
+            if saturated:
+                self._m_saturated.inc()
+        self._conn_q.put((request, client_address))
+
+    def _conn_worker(self) -> None:
+        while True:
+            item = self._conn_q.get()
+            if item is None:
+                return
+            request, client_address = item
+            with self._active_lock:
+                self._active += 1
+            try:
+                self.finish_request(request, client_address)
+            except Exception:       # noqa: BLE001 — mirror ThreadingMixIn
+                self.handle_error(request, client_address)
+            finally:
+                self.shutdown_request(request)
+                with self._active_lock:
+                    self._active -= 1
+
+    def server_close(self) -> None:
+        super().server_close()
+        for _ in self._conn_threads:
+            self._conn_q.put(None)
+
 
 class CatalogServer:
     """HTTP front-end over one shared :class:`Catalog`.
@@ -136,12 +240,23 @@ class CatalogServer:
     the immutable context manifest, and ``If-None-Match`` revalidation
     answers 304 with no body — a hot viewer re-polling the same object
     skips the transfer entirely (see :class:`RemoteCatalog`).
+
+    ``engine=True`` (the default) routes ``/v1/query`` through a
+    :class:`~repro.insitu.serve.ServeEngine`: concurrent identical
+    queries coalesce onto one backend read, region crops batch, and
+    admission control answers overload with 429 + ``Retry-After``
+    (optionally coupled to a staging ring via ``pressure_fn``, see
+    :func:`~repro.insitu.serve.staging_pressure`). Connection handling
+    runs on a bounded pool of ``max_connections`` workers rather than a
+    thread per connection.
     """
 
     def __init__(self, root, *, host: str = "127.0.0.1", port: int = 0,
                  cache_entries: int = 64, compress: bool = False,
-                 token: str | None = None):
-        if isinstance(root, Catalog):
+                 token: str | None = None, engine: bool = True,
+                 serve_workers: int = 4, max_pending: int = 256,
+                 max_connections: int = 32, pressure_fn=None):
+        if isinstance(root, Catalog) or hasattr(root, "query"):
             self.catalog, self._own_catalog = root, False
         else:
             self.catalog = Catalog(root, cache_entries=cache_entries)
@@ -149,9 +264,14 @@ class CatalogServer:
         self.compress = compress
         self.obs = obs_metrics.MetricsRegistry()
         self._sync_obs()
-        handler = _make_handler(self.catalog, compress, token, self.obs)
-        self.httpd = ThreadingHTTPServer((host, port), handler)
-        self.httpd.daemon_threads = True
+        self.engine = ServeEngine(
+            self.catalog, workers=serve_workers, max_pending=max_pending,
+            pressure_fn=pressure_fn, obs=self.obs) if engine else None
+        handler = _make_handler(self.catalog, compress, token, self.obs,
+                                self.engine)
+        self.httpd = _PooledHTTPServer(
+            (host, port), handler, max_connections=max_connections,
+            obs=self.obs)
         self.host, self.port = self.httpd.server_address[:2]
         self._thread: threading.Thread | None = None
 
@@ -168,8 +288,11 @@ class CatalogServer:
 
     def telemetry(self) -> dict:
         """JSON-able merged snapshot: cache counters + request metrics."""
-        return {"cache": self.catalog.cache_info(),
-                "metrics": self.obs.snapshot()}
+        out = {"cache": self.catalog.cache_info(),
+               "metrics": self.obs.snapshot()}
+        if self.engine is not None:
+            out["serve"] = self.engine.stats()
+        return out
 
     @property
     def url(self) -> str:
@@ -193,6 +316,8 @@ class CatalogServer:
         if self._thread is not None:
             self._thread.join(timeout=10.0)
             self._thread = None
+        if self.engine is not None:
+            self.engine.close()
         if self._own_catalog:
             self.catalog.close()
 
@@ -208,7 +333,8 @@ PROMETHEUS_CTYPE = "text/plain; version=0.0.4; charset=utf-8"
 
 def _make_handler(catalog: Catalog, compress: bool,
                   token: str | None = None,
-                  obs: obs_metrics.MetricsRegistry | None = None):
+                  obs: obs_metrics.MetricsRegistry | None = None,
+                  engine: ServeEngine | None = None):
     #: step -> last seen manifest identity; a change means the context
     #: was rewritten (engine resubmission) and cached bytes are stale
     idents: dict[int, tuple[int, int]] = {}
@@ -242,6 +368,8 @@ def _make_handler(catalog: Catalog, compress: bool,
             "request_seconds": {ep: _hist_digest(c)
                                 for (ep,), c in m_seconds.children()},
         }
+        if engine is not None:
+            info["serve"] = engine.stats()
         return info
 
     class Handler(BaseHTTPRequestHandler):
@@ -269,8 +397,45 @@ def _make_handler(catalog: Catalog, compress: bool,
                        headers)
 
         def _frame(self, arrays: dict, headers: dict | None = None) -> None:
-            self._send(200, pack_frame(arrays, compress=compress),
-                       "application/x-hx-frame", headers)
+            t0 = time.perf_counter()
+            body = pack_frame(arrays, compress=compress)
+            if engine is not None:
+                engine.observe_stage("encode", time.perf_counter() - t0)
+            t1 = time.perf_counter()
+            self._send(200, body, "application/x-hx-frame", headers)
+            if engine is not None:
+                engine.observe_stage("write", time.perf_counter() - t1)
+
+        def _stream_progressive(self, arrays: dict, tag: str) -> None:
+            """Chunked coarse-first response: one hx-frame per chunk
+            group, frame 0 = coarsest pyramid level + non-pyramidal
+            arrays, later frames = refinement blocks (bit-exact once
+            complete; see ``repro.insitu.serve.plan_progressive``)."""
+            t0 = time.perf_counter()
+            frames = plan_progressive(arrays)
+            if engine is not None:
+                engine.observe_stage("encode", time.perf_counter() - t0)
+            self._obs_status = 200
+            self.send_response(200)
+            self.send_header("Content-Type", "application/x-hx-frame-stream")
+            self.send_header("Transfer-Encoding", "chunked")
+            self.send_header("ETag", tag)
+            self.send_header("X-Progressive-Frames", str(len(frames)))
+            self.end_headers()
+            t1 = time.perf_counter()
+            for fr in frames:
+                data = pack_frame(fr, compress=False)
+                self.wfile.write(b"%X\r\n" % len(data) + data + b"\r\n")
+                self.wfile.flush()
+                self._obs_bytes += len(data)
+            self.wfile.write(b"0\r\n\r\n")
+            if engine is not None:
+                engine.observe_stage("write", time.perf_counter() - t1)
+
+        def _client_token(self) -> str:
+            """Fairness token: explicit client id, else the peer host."""
+            return self.headers.get("X-Client-Id") \
+                or self.client_address[0]
 
         # ----------------------------------------------------------- auth
         def _authorized(self) -> bool:
@@ -324,6 +489,15 @@ def _make_handler(catalog: Catalog, compress: bool,
                                headers={"WWW-Authenticate": "Bearer"})
                     return
                 self._route(url.path, q)
+            except ServeOverloaded as e:
+                # 4xx, not 5xx: the server is healthy, the client must
+                # back off (admission control, not failure)
+                self._json({"error": "overloaded",
+                            "message": str(e),
+                            "retry_after": e.retry_after},
+                           code=429,
+                           headers={"Retry-After":
+                                    f"{e.retry_after:.3f}"})
             except (KeyError, FileNotFoundError) as e:
                 # a step with no manifest is as absent as an unknown
                 # reducer: both surface as KeyError on the client
@@ -391,7 +565,8 @@ def _make_handler(catalog: Catalog, compress: bool,
                 if inm is not None and tag in (
                         t.strip() for t in inm.split(",")):
                     # client already holds these exact bytes: headers
-                    # only, no body (RFC 9110 §15.4.5)
+                    # only, no body (RFC 9110 §15.4.5) — revalidation
+                    # never touches the serving queue
                     self._obs_status = 304
                     if obs_metrics.ENABLED:
                         m_304.inc()
@@ -400,9 +575,17 @@ def _make_handler(catalog: Catalog, compress: bool,
                     self.send_header("Content-Length", "0")
                     self.end_headers()
                     return
-                self._frame(catalog.query(step, reducer, region=region,
-                                          domain=domain),
-                            headers={"ETag": tag})
+                if engine is not None:
+                    arrays = engine.fetch(step, reducer, region=region,
+                                          domain=domain,
+                                          client=self._client_token())
+                else:
+                    arrays = catalog.query(step, reducer, region=region,
+                                           domain=domain)
+                if q.get("progressive") in ("1", "true", "yes"):
+                    self._stream_progressive(arrays, tag)
+                else:
+                    self._frame(arrays, headers={"ETag": tag})
             elif path == "/v1/series":
                 steps = [int(s) for s in q["steps"].split(",")] \
                     if "steps" in q else None
@@ -421,6 +604,17 @@ def _make_handler(catalog: Catalog, compress: bool,
 
 # ----------------------------------------------------------------- client
 
+class CatalogBusy(RuntimeError):
+    """The server's admission control answered 429 (back off and retry).
+
+    ``retry_after`` carries the server's backoff hint in seconds.
+    """
+
+    def __init__(self, message: str, retry_after: float = 0.05):
+        super().__init__(message)
+        self.retry_after = float(retry_after)
+
+
 class RemoteCatalog:
     """Viewer-side twin of :class:`Catalog` over a catalog server.
 
@@ -434,15 +628,23 @@ class RemoteCatalog:
     polling loop stops re-downloading unchanged reductions
     (``etag_hits``/``etag_misses``, :meth:`client_cache_info`).
     ``token`` adds ``Authorization: Bearer`` to every request; a 401
-    surfaces as :class:`PermissionError`.
+    surfaces as :class:`PermissionError`. A 429 from the server's
+    admission control surfaces as :class:`CatalogBusy` — set
+    ``busy_retries`` to have the client honor ``Retry-After`` and retry
+    transparently. ``client_id`` names this viewer for the server's
+    per-client fair queueing (defaults to one token per process).
     """
 
     def __init__(self, base_url: str, *, timeout: float = 30.0,
-                 token: str | None = None, cache_entries: int = 32):
+                 token: str | None = None, cache_entries: int = 32,
+                 client_id: str | None = None, busy_retries: int = 0):
         self.base_url = base_url.rstrip("/")
         self.timeout = timeout
         self.token = token
         self.cache_entries = cache_entries
+        self.client_id = client_id if client_id is not None \
+            else f"pid-{os.getpid()}"
+        self.busy_retries = max(0, int(busy_retries))
         #: (step, reducer, domain, region) -> (etag, frozen arrays)
         self._etag_cache: collections.OrderedDict = collections.OrderedDict()
         self._cache_lock = threading.Lock()
@@ -450,39 +652,65 @@ class RemoteCatalog:
         self.etag_misses = 0
 
     # ------------------------------------------------------------- plumbing
-    def _request(self, path: str, headers: dict | None = None,
-                 **params) -> tuple[int, bytes, dict]:
-        """One GET; returns (status, body, response headers).
-
-        304 is a *result* here (ETag revalidation), not an error; 404
-        maps to KeyError (local-catalog parity) and 401 to
-        PermissionError.
-        """
+    def _open(self, path: str, headers: dict | None = None, **params):
+        """urlopen with auth + client-id headers; caller owns the body."""
         qs = urllib.parse.urlencode(
             {k: v for k, v in params.items() if v is not None})
         url = f"{self.base_url}{path}" + (f"?{qs}" if qs else "")
         req = urllib.request.Request(url, headers=dict(headers or {}))
         if self.token is not None:
             req.add_header("Authorization", f"Bearer {self.token}")
+        req.add_header("X-Client-Id", self.client_id)
+        return urllib.request.urlopen(req, timeout=self.timeout)
+
+    @staticmethod
+    def _raise_http(e: urllib.error.HTTPError):
+        """Map an HTTP error to the local-catalog exception surface."""
+        body = e.read()
         try:
-            with urllib.request.urlopen(req, timeout=self.timeout) as r:
-                return r.status, r.read(), dict(r.headers)
-        except urllib.error.HTTPError as e:
-            if e.code == 304:
-                e.read()
-                return 304, b"", dict(e.headers)
-            body = e.read()
+            msg = json.loads(body.decode()).get("message", "")
+        except Exception:
+            msg = body.decode(errors="replace")
+        if e.code == 404:
+            raise KeyError(msg) from None
+        if e.code == 401:
+            raise PermissionError(
+                f"catalog server refused the request: {msg}") from None
+        if e.code == 429:
             try:
-                msg = json.loads(body.decode()).get("message", "")
-            except Exception:
-                msg = body.decode(errors="replace")
-            if e.code == 404:
-                raise KeyError(msg) from None
-            if e.code == 401:
-                raise PermissionError(
-                    f"catalog server refused the request: {msg}") from None
-            raise RuntimeError(
-                f"catalog server error {e.code}: {msg}") from None
+                after = float(e.headers.get("Retry-After", "0.05"))
+            except ValueError:
+                after = 0.05
+            raise CatalogBusy(
+                f"catalog server overloaded: {msg}",
+                retry_after=after) from None
+        raise RuntimeError(
+            f"catalog server error {e.code}: {msg}") from None
+
+    def _request(self, path: str, headers: dict | None = None,
+                 **params) -> tuple[int, bytes, dict]:
+        """One GET; returns (status, body, response headers).
+
+        304 is a *result* here (ETag revalidation), not an error; 404
+        maps to KeyError (local-catalog parity), 401 to PermissionError
+        and 429 to :class:`CatalogBusy` — retried ``busy_retries``
+        times, sleeping the server's ``Retry-After`` hint between
+        attempts.
+        """
+        for attempt in range(self.busy_retries + 1):
+            try:
+                with self._open(path, headers, **params) as r:
+                    return r.status, r.read(), dict(r.headers)
+            except urllib.error.HTTPError as e:
+                if e.code == 304:
+                    e.read()
+                    return 304, b"", dict(e.headers)
+                try:
+                    self._raise_http(e)
+                except CatalogBusy as busy:
+                    if attempt >= self.busy_retries:
+                        raise
+                    time.sleep(min(1.0, busy.retry_after))
 
     def _get(self, path: str, **params) -> bytes:
         return self._request(path, **params)[1]
@@ -567,6 +795,30 @@ class RemoteCatalog:
                     self._etag_cache.popitem(last=False)
         return dict(arrays)
 
+    def query_progressive(self, step: int, reducer: str, *,
+                          region=None, domain: int | None = None):
+        """Iterate coarse-to-fine reconstructions of one reduced object.
+
+        Yields a ``{name: array}`` dict after every received frame: the
+        first arrives after one coarse chunk (the ``fpdelta-pyramid``
+        root level upsampled to full shape), later ones refine, and the
+        final yield is **bit-exact** with :meth:`query` — the pyramid
+        codec is lossless. Bypasses the ETag cache (the stream is the
+        transfer-avoidance mechanism here).
+        """
+        region = _normalize_region(region)
+        try:
+            resp = self._open(
+                "/v1/query", step=step, reducer=reducer, domain=domain,
+                region=_format_region(region) if region is not None
+                else None, progressive=1)
+        except urllib.error.HTTPError as e:
+            self._raise_http(e)
+        asm = ProgressiveAssembler()
+        with resp:
+            while not asm.done:
+                yield asm.feed(unpack_frame(_read_wire_frame(resp)))
+
     def series(self, reducer: str, name: str, *,
                steps: list[int] | None = None) -> tuple[np.ndarray, list]:
         """(steps, values) time series of one array across contexts."""
@@ -585,5 +837,5 @@ def open_catalog(target: str, **kw):
     return Catalog(target, **kw)
 
 
-__all__ = ["CatalogServer", "RemoteCatalog", "open_catalog",
-           "pack_frame", "unpack_frame", "FRAME_SCHEMA"]
+__all__ = ["CatalogServer", "RemoteCatalog", "CatalogBusy",
+           "open_catalog", "pack_frame", "unpack_frame", "FRAME_SCHEMA"]

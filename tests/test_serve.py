@@ -1,0 +1,406 @@
+"""Serving-engine tests (PR 8 acceptance).
+
+Covers: single-flight coalescing under a thundering herd (N concurrent
+identical queries, one backend read, byte-identical responses), region
+batching onto one flight, admission control (ServeOverloaded / HTTP 429
+with Retry-After, backpressure-coupled capacity), per-client round-robin
+fairness, cache-hit admission bypass, progressive (coarse-first)
+response planning and bit-exact reassembly, the HTTP integration
+(engine-routed /v1/query, ETag/304 interplay, busy retries, chunked
+progressive streams), and the bounded connection-worker pool.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.insitu import (Catalog, CatalogBusy, CatalogServer,
+                          InTransitEngine, LevelHistogramReducer,
+                          ProgressiveAssembler, ProjectionReducer,
+                          RemoteCatalog, ServeEngine, ServeOverloaded,
+                          SliceReducer, plan_progressive)
+from repro.insitu.server import pack_frame, unpack_frame
+from repro.sim import amrgen, fields
+
+
+# --------------------------------------------------------------- fakes
+
+class FakeCatalog:
+    """In-memory catalog double: countable, pace-able backend reads."""
+
+    def __init__(self, delay=0.0):
+        self.delay = delay
+        self.reads = []
+        self._lock = threading.Lock()
+        self._cached = set()
+
+    def peek(self, step, reducer, domain=None):
+        return (step, reducer, domain) in self._cached
+
+    def query(self, step, reducer, *, domain=None):
+        if self.delay:
+            time.sleep(self.delay)
+        with self._lock:
+            self.reads.append((step, reducer, domain))
+        arr = np.arange(64 * 64, dtype=np.float64).reshape(64, 64) + step
+        arr.flags.writeable = False
+        return {"image": arr}
+
+
+def _storm(engine, n, call):
+    """Barrier-release ``n`` threads through ``call(i)``; collect."""
+    results, errors = [None] * n, [None] * n
+    bar = threading.Barrier(n)
+
+    def run(i):
+        bar.wait()
+        try:
+            results[i] = call(i)
+        except Exception as exc:              # noqa: BLE001 — assert later
+            errors[i] = exc
+
+    ts = [threading.Thread(target=run, args=(i,)) for i in range(n)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    return results, errors
+
+
+# ------------------------------------------------------- single flight
+
+def test_thundering_herd_single_read():
+    fake = FakeCatalog(delay=0.05)
+    eng = ServeEngine(fake, workers=2, max_pending=64)
+    try:
+        res, errs = _storm(eng, 24, lambda i: eng.fetch(1, "slice"))
+        assert not any(errs)
+        assert len(fake.reads) == 1          # one decode+merge for 24
+        ref = res[0]["image"]
+        for r in res[1:]:                    # byte-identical responses
+            assert r["image"].tobytes() == ref.tobytes()
+        st = eng.stats()
+        assert st["coalesced"] == 23
+        assert st["backend_reads"] == 1
+    finally:
+        eng.close()
+
+
+def test_batched_region_crops_one_read():
+    fake = FakeCatalog(delay=0.05)
+    eng = ServeEngine(fake, workers=2, max_pending=64)
+    regions = [None, ((0, 16), (0, 16)), ((8, 24), (8, 24)),
+               ((0, 32), (32, 64))]
+    try:
+        res, errs = _storm(
+            eng, 16,
+            lambda i: eng.fetch(1, "slice", region=regions[i % 4],
+                                client=f"c{i}"))
+        assert not any(errs)
+        assert len(fake.reads) == 1          # all crops share the read
+        full = fake.query(1, "slice")["image"]
+        fake.reads.clear()
+        for i, r in enumerate(res):
+            reg = regions[i % 4]
+            want = full if reg is None else \
+                full[tuple(slice(lo, hi) for lo, hi in reg)]
+            np.testing.assert_array_equal(r["image"], want)
+        assert eng.stats()["batched_reads"] >= 1
+    finally:
+        eng.close()
+
+
+def test_distinct_keys_not_coalesced():
+    fake = FakeCatalog(delay=0.01)
+    eng = ServeEngine(fake, workers=4, max_pending=64)
+    try:
+        res, errs = _storm(eng, 8, lambda i: eng.fetch(i, "slice"))
+        assert not any(errs)
+        assert len(fake.reads) == 8          # 8 distinct steps
+        for i, r in enumerate(res):
+            assert r["image"][0, 0] == float(i)
+    finally:
+        eng.close()
+
+
+# --------------------------------------------------- admission control
+
+def test_admission_rejects_with_retry_after():
+    fake = FakeCatalog(delay=0.2)
+    eng = ServeEngine(fake, workers=1, max_pending=1)
+    try:
+        t0 = threading.Thread(target=lambda: eng.fetch(1, "slice"))
+        t0.start()
+        time.sleep(0.05)                     # step 1 occupies the worker
+        with pytest.raises(ServeOverloaded) as ei:
+            # a *distinct* key cannot coalesce and must be rejected:
+            # pending is already at max_pending
+            eng.fetch(2, "slice")
+        assert ei.value.retry_after > 0
+        t0.join()
+        assert eng.stats()["rejections"] == 1
+    finally:
+        eng.close()
+
+
+def test_backpressure_shrinks_capacity():
+    fake = FakeCatalog()
+    eng = ServeEngine(fake, workers=1, max_pending=100,
+                      pressure_fn=lambda: 1.0)
+    try:
+        # full staging pressure collapses admission to the ~10% floor
+        assert 1 <= eng.capacity() <= 10
+        assert eng.retry_after() > ServeEngine(fake).retry_after()
+    finally:
+        eng.close()
+
+
+def test_cache_hit_bypasses_admission():
+    fake = FakeCatalog(delay=0.2)
+    fake._cached.add((7, "slice", None))
+    eng = ServeEngine(fake, workers=1, max_pending=1,
+                      pressure_fn=lambda: 1.0)
+    try:
+        t0 = threading.Thread(target=lambda: eng.fetch(1, "slice"))
+        t0.start()
+        time.sleep(0.05)
+        # the queue is saturated, but step 7 is already cached: it must
+        # be served inline, not 429'd
+        out = eng.fetch(7, "slice")
+        assert out["image"][0, 0] == 7.0
+        t0.join()
+        assert eng.stats()["cache_serves"] == 1
+        assert eng.stats()["rejections"] == 0
+    finally:
+        eng.close()
+
+
+def test_fairness_round_robin_across_clients():
+    fake = FakeCatalog(delay=0.05)
+    eng = ServeEngine(fake, workers=1, max_pending=64)
+    done = {}
+    lock = threading.Lock()
+
+    def fetch(step, client):
+        eng.fetch(step, "slice", client=client)
+        with lock:
+            done[(client, step)] = time.perf_counter()
+
+    try:
+        # client A floods the single worker with 6 distinct keys...
+        blocker = threading.Thread(target=fetch, args=(0, "A"))
+        blocker.start()
+        time.sleep(0.02)                     # A's first read is running
+        flood = [threading.Thread(target=fetch, args=(s, "A"))
+                 for s in range(1, 6)]
+        for t in flood:
+            t.start()
+        time.sleep(0.02)                     # A's queue is now deep
+        b = threading.Thread(target=fetch, args=(100, "B"))
+        b.start()
+        for t in [blocker, *flood, b]:
+            t.join()
+        # ...yet B's single request is served round-robin: before A's
+        # queue tail, not after it
+        b_done = done[("B", 100)]
+        a_after_b = [s for s in range(1, 6)
+                     if done[("A", s)] > b_done]
+        assert a_after_b, (
+            "client B waited behind client A's whole backlog")
+    finally:
+        eng.close()
+
+
+def test_close_fails_queued_flights():
+    fake = FakeCatalog(delay=0.2)
+    eng = ServeEngine(fake, workers=1, max_pending=32)
+    errs = []
+
+    def go(step):
+        try:
+            eng.fetch(step, "slice")
+        except RuntimeError as exc:
+            errs.append(exc)
+
+    ts = [threading.Thread(target=go, args=(s,)) for s in range(4)]
+    for t in ts:
+        t.start()
+    time.sleep(0.05)
+    eng.close()
+    for t in ts:
+        t.join()
+    # whatever had not completed was failed fast, not left hanging
+    assert len(errs) + len(fake.reads) >= 4
+
+
+# ---------------------------------------------------------- progressive
+
+def test_progressive_plan_and_reassembly_bitexact():
+    rng = np.random.default_rng(7)
+    arrays = {
+        "image": np.cumsum(rng.standard_normal((96, 96)), axis=1),
+        "field32": np.cumsum(rng.standard_normal(9000)
+                             ).astype(np.float32),
+        "counts": np.arange(500, dtype=np.int64),   # ints: frame 0 only
+        "tiny": np.ones(16),                         # below min_size
+    }
+    frames = plan_progressive(arrays)
+    assert len(frames) > 1
+    assert "counts" in frames[0] and "tiny" in frames[0]
+    assert "image@root" in frames[0]
+    asm = ProgressiveAssembler()
+    errs = []
+    for fr in frames:
+        cur = asm.feed(unpack_frame(pack_frame(fr)))
+        errs.append(float(np.abs(cur["image"] - arrays["image"]).max()))
+    assert asm.done
+    # refinement is monotone: every chunk tightens the preview
+    assert errs == sorted(errs, reverse=True)
+    assert errs[-1] == 0.0
+    final = asm.result()
+    for name, arr in arrays.items():
+        assert final[name].dtype == arr.dtype
+        np.testing.assert_array_equal(final[name], arr)
+
+
+def test_progressive_small_arrays_single_frame():
+    frames = plan_progressive({"v": np.arange(10, dtype=np.float64)})
+    assert len(frames) == 1                  # nothing worth refining
+    asm = ProgressiveAssembler()
+    asm.feed(unpack_frame(pack_frame(frames[0])))
+    assert asm.done
+    np.testing.assert_array_equal(asm.result()["v"], np.arange(10.0))
+
+
+# ----------------------------------------------------- HTTP integration
+
+@pytest.fixture(scope="module")
+def served_db(tmp_path_factory):
+    root = str(tmp_path_factory.mktemp("serve") / "db")
+    eng = InTransitEngine(root, [
+        SliceReducer(field="density", axis=2, position=0.5,
+                     resolution=64),
+        ProjectionReducer(field="density", axis=2, resolution=64),
+        LevelHistogramReducer(field="density", bins=16, lo=0.0, hi=8.0),
+    ], domains=2).start()
+    tree = amrgen.generate_tree(fields.sedov(), min_level=2, max_level=4,
+                                threshold=1.2)
+    assert eng.submit(1, tree)
+    eng.close()
+    return root
+
+
+class SlowCatalog:
+    """Duck-typed pass-through catalog with paced, counted reads."""
+
+    def __init__(self, inner, delay=0.05):
+        self._inner = inner
+        self.delay = delay
+        self.backend_reads = 0
+        self._count_lock = threading.Lock()
+
+    def query(self, *a, **kw):
+        time.sleep(self.delay)
+        with self._count_lock:
+            self.backend_reads += 1
+        return self._inner.query(*a, **kw)
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+
+def test_http_storm_coalesces_with_etag_interplay(served_db):
+    slow = SlowCatalog(Catalog(served_db), delay=0.05)
+    srv = CatalogServer(slow, port=0).start()
+    try:
+        name = RemoteCatalog(srv.url).reducers(1)[0]
+        slow._inner.clear_cache()
+        reads0 = slow.backend_reads
+
+        def one(i):
+            return RemoteCatalog(
+                srv.url, client_id=f"c{i}").query(1, name)
+
+        res, errs = _storm(srv.engine, 16, one)
+        assert not any(errs)
+        # exactly one *flight* read the backend; a late-arriving client
+        # may additionally be served inline from the warm cache
+        assert srv.engine.stats()["backend_reads"] == 1
+        assert slow.backend_reads - reads0 >= 1
+        ref = {k: v.tobytes() for k, v in res[0].items()}
+        for r in res[1:]:
+            assert {k: v.tobytes() for k, v in r.items()} == ref
+        assert srv.engine.stats()["coalesced"] > 0
+        # a client that already holds the ETag revalidates with a 304
+        # that never touches the serving queue
+        rc = RemoteCatalog(srv.url)
+        rc.query(1, name)
+        reads1, inflight1 = slow.backend_reads, srv.engine.stats()
+        rc.query(1, name)                    # -> 304
+        assert rc.client_cache_info()["etag_hits"] == 1
+        assert slow.backend_reads == reads1
+        assert srv.engine.stats()["backend_reads"] == \
+            inflight1["backend_reads"]
+    finally:
+        srv.close()
+
+
+def test_http_429_and_busy_retries(served_db):
+    slow = SlowCatalog(Catalog(served_db), delay=0.3)
+    srv = CatalogServer(slow, port=0, serve_workers=1, max_pending=1)
+    srv.start()
+    try:
+        names = RemoteCatalog(srv.url).reducers(1)
+        slow._inner.clear_cache()
+        t0 = threading.Thread(
+            target=lambda: RemoteCatalog(srv.url).query(1, names[0]))
+        t0.start()
+        time.sleep(0.1)                      # names[0] holds the worker
+        with pytest.raises(CatalogBusy) as ei:
+            RemoteCatalog(srv.url).query(1, names[1])
+        assert ei.value.retry_after > 0
+        # with retries enabled the same request eventually lands
+        out = RemoteCatalog(srv.url, busy_retries=20).query(1, names[1])
+        assert out
+        t0.join()
+        assert srv.engine.stats()["rejections"] >= 1
+        assert srv.telemetry()["serve"]["rejections"] >= 1
+    finally:
+        srv.close()
+
+
+def test_http_progressive_stream_matches_buffered(served_db):
+    srv = CatalogServer(served_db, port=0, compress=True).start()
+    try:
+        rc = RemoteCatalog(srv.url)
+        for name in rc.reducers(1):
+            buffered = RemoteCatalog(srv.url).query(1, name)
+            stages = list(rc.query_progressive(1, name))
+            final = stages[-1]
+            for k, v in buffered.items():
+                assert final[k].dtype == v.dtype
+                np.testing.assert_array_equal(final[k], v)
+    finally:
+        srv.close()
+
+
+def test_bounded_connection_pool(served_db):
+    srv = CatalogServer(served_db, port=0, max_connections=2).start()
+    try:
+        name = RemoteCatalog(srv.url).reducers(1)[0]
+
+        def one(i):
+            return RemoteCatalog(srv.url,
+                                 client_id=f"p{i}").query(1, name)
+
+        # 12 concurrent connections through a 2-worker pool: all are
+        # served (queued, not dropped), and saturation is observable
+        res, errs = _storm(srv.engine, 12, one)
+        assert not any(errs)
+        assert all(r is not None for r in res)
+        text = srv.obs.render_prometheus()
+        assert "server_conn_pool_size 2" in text
+        assert "# TYPE server_conn_saturation_total counter" in text
+    finally:
+        srv.close()
