@@ -13,9 +13,12 @@ code is non-zero only for unusable inputs, or with ``--strict`` when a
 warning fired (for local use).
 
 Record semantics: values are costs (µs per call & friends) — higher is
-worse — except ``unit`` values ending in ``x``/``ratio``/``speedup``/
-``qps``, which are benefits — lower is worse. Records present on only
-one side are listed as added/removed, never warned.
+worse — except units whose last ``_``-separated token is exactly
+``x``/``ratio``/``speedup``/``qps``, which are benefits — lower is
+worse. The match is on whole tokens, not suffixes: ``bytes_per_step_max``
+is a cost even though it *ends* with ``x``, and ``frac`` (fractions such
+as per-device residency) is a cost too. Records present on only one side
+are listed as added/removed, never warned.
 """
 from __future__ import annotations
 
@@ -39,8 +42,10 @@ def load_records(path: str) -> dict[str, dict]:
 
 
 def _is_benefit(rec: dict) -> bool:
+    # whole-token match: "max".endswith("x") must NOT make a cost unit a
+    # benefit, and "frac" stays a cost (smaller residency = better)
     unit = str(rec.get("unit") or "")
-    return any(unit.endswith(b) for b in BENEFIT_UNITS)
+    return unit.rsplit("_", 1)[-1] in BENEFIT_UNITS
 
 
 def diff(old: dict[str, dict], new: dict[str, dict], warn_pct: float

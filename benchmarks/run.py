@@ -29,7 +29,10 @@ FLOORS = {"bench_api": 5.0,
 #: record name -> maximum acceptable emitted value (checked when the
 #: record exists; an absent record means its module was deselected or
 #: already failed with a traceback)
-CEILINGS = {"insitu.obs_overhead_pct": 2.0}
+CEILINGS = {"insitu.obs_overhead_pct": 2.0,
+            # sharded mesh reduction: no device may hold more than ~1/N
+            # (+ padding slack) of the leaf table at the 4-device bench
+            "insitu.mesh_peak_leaf_frac": 0.6}
 
 #: record name -> minimum acceptable emitted value, same existence
 #: semantics as CEILINGS (today: the serving engine must coalesce a

@@ -28,6 +28,10 @@ written at an independent cadence.
     (``DeviceStagingArea``) plus a device-reducer registry over the
     Pallas rasterization kernels, so only *reduced* objects cross the
     device→host boundary (``InTransitEngine(device_reduce=True)``).
+  * :mod:`mesh_reduce` — the sharded variant: each snapshot's leaf
+    table is Hilbert-partitioned over a JAX device mesh, rasterized
+    under ``shard_map`` and merged on device, so no device ever holds
+    more than ~1/N of a snapshot (``device_reduce="mesh"``).
   * :mod:`catalog`   — the read side: cached, domain-merged queries for
     many concurrent viewers.
   * :mod:`serve`     — the continuous-batching serving core: in-flight
@@ -55,11 +59,17 @@ from .staging import (POLICIES, ShmStagingArea, Snapshot,      # noqa: F401
 _DEVICE_NAMES = ("DeviceStagingArea", "DeviceDAGRunner", "DeviceTree",
                  "register_device_impl", "device_impl_for")
 
+_MESH_NAMES = ("MeshDAGRunner", "MeshRunStats", "MeshTable",
+               "register_mesh_impl", "mesh_impl_for")
+
 
 def __getattr__(name: str):
-    # the device module pulls in jax at call time; keep the package
+    # the device/mesh modules pull in jax at call time; keep the package
     # import light for the (host-only) CLI paths
     if name in _DEVICE_NAMES:
         from . import device
         return getattr(device, name)
+    if name in _MESH_NAMES:
+        from . import mesh_reduce
+        return getattr(mesh_reduce, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

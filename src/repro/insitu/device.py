@@ -32,10 +32,16 @@ the CPU/interpret kernels see the simulation's float64 exactly; on a
 real TPU the registry would be populated with float32 variants (no f64
 hardware) — documented, not implemented, since CI has no TPU.
 
-Device impl factories return ``None`` (→ host fallback) for configs the
-kernels do not cover: reducers with an upstream ``source`` (the LOD cut
-runs on host) and non-power-of-two resolutions (the kernels' pixel
-geometry is exact integer arithmetic).
+Device impl factories return ``None`` for configs the kernels do not
+cover — non-power-of-two resolutions (the kernels' pixel geometry is
+exact integer arithmetic). Reducers chained on an upstream ``source``
+run on host but read only that upstream's already-transferred output,
+so they never force a snapshot materialization; with the device-side
+LOD cut the default CLI DAG has **zero** full-snapshot fallbacks.
+
+``insitu.mesh_reduce`` builds the third path on these pieces: the same
+DAG sharded over a JAX device mesh (``shard_map`` partial rasters +
+on-device merge), selected with ``InTransitEngine(device_reduce="mesh")``.
 """
 from __future__ import annotations
 
@@ -44,8 +50,8 @@ import threading
 import numpy as np
 
 from ..obs.trace import TRACER
-from .reducers import (LevelHistogramReducer, ProjectionReducer,
-                       ReducerDAG, SliceReducer)
+from .reducers import (LevelHistogramReducer, LODCutReducer,
+                       ProjectionReducer, ReducerDAG, SliceReducer)
 from .staging import Snapshot, StagingArea
 
 #: leaf-table padding bucket: bounds jit retraces as trees grow/shrink
@@ -239,6 +245,41 @@ def _projection_impl(r: ProjectionReducer):
     return run
 
 
+@register_device_impl(LODCutReducer)
+def _lod_impl(r: LODCutReducer):
+    """Device-side LOD cut: slice the BFS prefix, demote the new floor.
+
+    ``keep = levels <= max_level`` is a *prefix* of the level-major BFS
+    arrays, so the host path's ``subset_tree`` selection is an identity
+    re-index over the first ``offsets[max_level+1]`` rows: the cut is a
+    device-side slice plus a ``refine=False`` stamp on the new deepest
+    level (the host's ``force_leaf`` demotion). Only ``level_offsets``
+    (a few dozen bytes, counted as meta) crosses to the host to size
+    the slices; the cut tree itself crosses only as the reducer output.
+    Kills the last full-snapshot fallback in the default CLI DAG.
+    """
+    def run(dt: DeviceTree):
+        import jax.numpy as jnp
+        offs = np.asarray(dt.arrays["level_offsets"]).astype(np.int64)
+        dt.count_to_host(offs.nbytes)
+        if len(offs) - 1 <= r.max_level + 1:
+            return dict(dt.arrays)          # already at/below the cut
+        n_keep = int(offs[r.max_level + 1])
+        new_offs = offs[:r.max_level + 2].copy()
+        # trim now-empty deepest levels, exactly like subset_tree
+        n_lv = len(new_offs) - 1
+        while n_lv > 1 and new_offs[n_lv] == new_offs[n_lv - 1]:
+            n_lv -= 1
+        refine = jnp.asarray(dt.arrays["refine"])[:n_keep]
+        refine = refine.at[int(offs[r.max_level]):n_keep].set(False)
+        out = {"refine": refine, "level_offsets": new_offs[:n_lv + 1]}
+        for k, v in dt.arrays.items():
+            if k not in out and k != "level_offsets":
+                out[k] = jnp.asarray(v)[:n_keep]
+        return out
+    return run
+
+
 @register_device_impl(LevelHistogramReducer)
 def _hist_impl(r: LevelHistogramReducer):
     def run(dt: DeviceTree):
@@ -321,6 +362,12 @@ class DeviceDAGRunner:
         with self._lock:
             self.stats.bytes_meta_to_host += nbytes
 
+    def _make_view(self, snap: Snapshot):
+        """Per-snapshot view handed to the registered impls (overridable:
+        the mesh runner builds sharded leaf tables here instead)."""
+        return DeviceTree(snap.arrays, snap.n_domains, self._count_meta,
+                          backend=self.backend)
+
     def run(self, snap: Snapshot) -> dict[str, dict[str, np.ndarray]]:
         import jax
         from jax.experimental import enable_x64
@@ -335,9 +382,7 @@ class DeviceDAGRunner:
                 impl = self.impls.get(r.name)
                 if impl is not None:
                     if dt is None:
-                        dt = DeviceTree(snap.arrays, snap.n_domains,
-                                        self._count_meta,
-                                        backend=self.backend)
+                        dt = self._make_view(snap)
                     moved = 0
                     out = {}
                     # spans nest under the lane's open "reduce" span;
@@ -362,6 +407,14 @@ class DeviceDAGRunner:
                         self.stats.device_objects += 1
                         self.stats.bytes_reduced_to_host += sum(
                             np.asarray(v).nbytes for v in out.values())
+                elif getattr(r, "source", None):
+                    # source-chained reducers only read their upstream's
+                    # (already transferred) output — run them on host
+                    # without materializing the snapshot
+                    out = r.reduce(snap, outputs)
+                    with self._lock:
+                        self.stats.fallback_runs[r.name] = \
+                            self.stats.fallback_runs.get(r.name, 0) + 1
                 else:
                     if host_snap is None:
                         host_arrays, moved = {}, 0

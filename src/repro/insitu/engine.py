@@ -77,19 +77,31 @@ class InTransitEngine:
                  ncf: int = 4, compress: bool = False, domains: int = 1,
                  durable_parts: bool = False, backend: str = "thread",
                  step_ttl: float | None = None,
-                 device_reduce: bool = False, lane_pool: bool = False):
+                 device_reduce: bool | str = False,
+                 mesh_devices: int | None = None,
+                 lane_pool: bool = False):
         from .lanes import BACKENDS
         if backend not in BACKENDS:   # before creating anything on disk
             raise ValueError(f"unknown lane backend {backend!r}; "
                              f"registered: {sorted(BACKENDS)}")
         self.n_domains = max(1, domains)
-        self.device_reduce = bool(device_reduce)
+        if isinstance(device_reduce, str) and device_reduce != "mesh":
+            raise ValueError(
+                f"unknown device_reduce mode {device_reduce!r}; use "
+                f"True (single device) or 'mesh' (sharded shard_map "
+                f"reduction over a device mesh)")
+        self.device_reduce = device_reduce if device_reduce == "mesh" \
+            else bool(device_reduce)
+        if mesh_devices is not None and self.device_reduce != "mesh":
+            raise ValueError(
+                "mesh_devices only applies with device_reduce='mesh'")
         if self.device_reduce and backend != "thread":
             # device arrays cannot cross to spawned lane processes; the
             # device path exists precisely to avoid such copies
             raise ValueError(
-                "device_reduce=True requires backend='thread' (device "
-                "arrays stay in the engine process)")
+                f"device_reduce={self.device_reduce!r} requires "
+                f"backend='thread' (device arrays and the device mesh "
+                f"stay in the engine process)")
         if lane_pool and backend != "process":
             raise ValueError(
                 "lane_pool=True only applies to backend='process' "
@@ -102,7 +114,13 @@ class InTransitEngine:
         #: device-reduce runner (None = host DAG execution); staging
         #: residency follows it — see lanes.ThreadLaneBackend
         self._device = None
-        if self.device_reduce:
+        if self.device_reduce == "mesh":
+            # sharded path: snapshots stage on *host* (the leaf table is
+            # Hilbert-sharded over the mesh at reduce time), so the
+            # staging area stays the plain host one — see lanes
+            from .mesh_reduce import MeshDAGRunner
+            self._device = MeshDAGRunner(self.dag, devices=mesh_devices)
+        elif self.device_reduce:
             from .device import DeviceDAGRunner
             self._device = DeviceDAGRunner(self.dag)
         self.compress = compress

@@ -118,7 +118,10 @@ class ThreadLaneBackend(LaneBackend):
         super().__init__(engine)
         del lane_pool   # validated engine-side: process-lane concern
         area_cls = StagingArea
-        if engine.device_reduce:
+        if engine.device_reduce and engine.device_reduce != "mesh":
+            # mesh reduction stages on host — the runner re-shards each
+            # snapshot's leaf table over the mesh itself, so a single
+            # device-resident copy would only add a pointless hop
             from .device import DeviceStagingArea
             area_cls = DeviceStagingArea
         self.stages = [

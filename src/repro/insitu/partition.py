@@ -28,7 +28,25 @@ import numpy as np
 from ..core import decompose
 from ..core.amr import AMRTree, subset_tree
 
-__all__ = ["partition_snapshot", "partition_tree", "partition_named"]
+__all__ = ["partition_snapshot", "partition_tree", "partition_named",
+           "leaf_shards"]
+
+
+def leaf_shards(arrays: dict[str, np.ndarray], n_shards: int) -> np.ndarray:
+    """Per-leaf shard id, Hilbert-contiguous — the mesh path's split.
+
+    Returns an ``(n_leaves,)`` int array aligned with
+    ``np.flatnonzero(~refine)`` (BFS leaf order). Shard ``g``'s leaves
+    are the same set the multi-domain writer would assign to domain
+    ``g`` (:func:`repro.core.decompose.assign_domains`), so per-shard
+    partial reductions are bitwise the per-domain host outputs and the
+    on-device merge can mirror the read-side merge strategies exactly.
+    """
+    tree = AMRTree.from_arrays(arrays)
+    if n_shards <= 1:
+        return np.zeros(int((~tree.refine).sum()), np.int64)
+    return np.asarray(decompose.assign_domains(tree, n_shards),
+                      np.int64)
 
 
 def _group_tree(tree: AMRTree, leaf_domain: np.ndarray, group: int,

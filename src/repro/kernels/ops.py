@@ -260,6 +260,149 @@ def raster_level_hist(values, levels, ok, edges, *, n_levels: int,
     return hist.astype(jnp.int64)
 
 
+# ------------------------------------------- partial (sharded/tiled) rasters
+#
+# Building blocks for the mesh path (``insitu.mesh_reduce``): rasterize
+# an arbitrary BFS-ordered *subset* of the leaf table into a partial
+# image — callers merge partials on-device (depth-resolve / ordered sum
+# / psum). Unlike the full entry points these are not jitted here: they
+# run inside the caller's ``shard_map``/jit. ``tile_n`` enables the
+# tiled-gather formulation: the table is processed in fixed-size tiles
+# gathered with ``dynamic_slice``, carrying the partial image between
+# tiles — one compiled kernel at the tile shape serves any table length
+# (bounded retraces) and the kernel working set stays at the padded
+# bucket budget. Chaining tiles in BFS order is bit-identical to the
+# single-shot call (see the carry kernels / seeded oracles).
+
+def _ceil_to(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+def _pad_rows(x, n_to: int, fill):
+    n = x.shape[0]
+    if n == n_to:
+        return x
+    width = [(0, n_to - n)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, width, constant_values=fill)
+
+
+def raster_slice_partial(coords, levels, values, ok, *, axis: int,
+                         position: float, resolution: int, n_levels: int,
+                         backend: str | None = None, block_n: int = BLOCK_N,
+                         tile_n: int | None = None):
+    """Partial slice raster: returns ``(image, depth)`` for a leaf subset.
+
+    ``depth`` is the painting leaf's level (-1 where uncovered) — the
+    on-device depth-resolve merge key. Seeding an all-NaN/-1 pair and
+    running the full table reproduces :func:`raster_slice` bit for bit.
+    """
+    backend = _resolve(backend)
+    _assert_pow2(resolution)
+    ax_u, ax_v = _axes_uv(axis)
+    coords2 = jnp.stack([coords[:, ax_u], coords[:, ax_v]], 1
+                        ).astype(jnp.int32)
+    c_axis = coords[:, axis]
+    levels = levels.astype(jnp.int32)
+
+    def tile(c2, ca, lv, val, okk, img, depth):
+        if backend == "ref":
+            return ref.slice_raster_depth_ref(
+                c2, ca, lv, val, okk, position=position,
+                resolution=resolution, n_levels=n_levels,
+                init=(img, depth))
+        hit = raster_kernel.plane_hit(ca, lv, position, val.dtype)
+        u0, v0, px = raster_kernel.leaf_table(c2, lv, resolution=resolution)
+        good = (okk & hit).astype(jnp.int32)
+        return raster_kernel.slice_raster_carry(
+            _pad_leaf(u0, 0, block_n), _pad_leaf(v0, 0, block_n),
+            _pad_leaf(px, 1, block_n), _pad_leaf(lv, 0, block_n),
+            _pad_leaf(val, 0, block_n), _pad_leaf(good, 0, block_n),
+            img, depth, resolution=resolution, block_n=block_n,
+            interpret=(backend == "pallas_interpret"))
+
+    seed = (jnp.full((resolution, resolution), jnp.nan, values.dtype),
+            jnp.full((resolution, resolution), -1, jnp.int32))
+    return _run_tiles(tile, (coords2, c_axis, levels, values, ok), seed,
+                      tile_n=tile_n, block_n=block_n)
+
+
+def raster_projection_partial(coords, levels, values, ok, *, axis: int,
+                              resolution: int, n_levels: int,
+                              backend: str | None = None,
+                              block_n: int = BLOCK_N,
+                              tile_n: int | None = None):
+    """Partial projection raster: per-subset column-density image."""
+    backend = _resolve(backend)
+    _assert_pow2(resolution)
+    ax_u, ax_v = _axes_uv(axis)
+    coords2 = jnp.stack([coords[:, ax_u], coords[:, ax_v]], 1
+                        ).astype(jnp.int32)
+    levels = levels.astype(jnp.int32)
+
+    def tile(c2, lv, val, okk, img):
+        if backend == "ref":
+            return (ref.projection_raster_ref(
+                c2, lv, val, okk, resolution=resolution,
+                n_levels=n_levels, init=img),)
+        u0, v0, px = raster_kernel.leaf_table(c2, lv, resolution=resolution)
+        size = jnp.asarray(2.0, val.dtype) ** (-lv.astype(val.dtype))
+        contrib = val * size
+        return (raster_kernel.projection_raster_carry(
+            _pad_leaf(u0, 0, block_n), _pad_leaf(v0, 0, block_n),
+            _pad_leaf(px, 1, block_n), _pad_leaf(contrib, 0, block_n),
+            _pad_leaf(okk.astype(jnp.int32), 0, block_n),
+            img, resolution=resolution, block_n=block_n,
+            interpret=(backend == "pallas_interpret")),)
+
+    seed = (jnp.zeros((resolution, resolution), values.dtype),)
+    return _run_tiles(tile, (coords2, levels, values, ok), seed,
+                      tile_n=tile_n, block_n=block_n)[0]
+
+
+def raster_level_hist_partial(values, levels, ok, edges, *, n_levels: int,
+                              backend: str | None = None,
+                              block_n: int = BLOCK_N):
+    """Partial per-level histogram: (L, B) int32 counts for a subset.
+
+    Integer counts are order-free, so partials merge with ``psum``. No
+    ``tile_n``: the kernel's grid already streams the table block by
+    block with an O(L·B) working set.
+    """
+    backend = _resolve(backend)
+    levels = levels.astype(jnp.int32)
+    if backend == "ref":
+        return ref.level_hist_ref(values, levels, ok, edges,
+                                  n_levels=n_levels)
+    return raster_kernel.level_hist(
+        _pad_leaf(values, jnp.nan if values.dtype.kind == "f" else 0,
+                  block_n),
+        _pad_leaf(levels, 0, block_n),
+        _pad_leaf(ok.astype(jnp.int32), 0, block_n),
+        edges[None, :], n_levels=n_levels, bins=edges.shape[-1] - 1,
+        block_n=block_n, interpret=(backend == "pallas_interpret"))
+
+
+def _run_tiles(tile_fn, arrays, seed, *, tile_n: int | None, block_n: int):
+    """Drive ``tile_fn`` over the table once, or tiled with a carry."""
+    n = arrays[0].shape[0]
+    if tile_n is None or n <= tile_n:
+        return tile_fn(*arrays, *seed)
+    if tile_n % block_n:
+        raise ValueError(f"tile_n={tile_n} not a multiple of "
+                         f"block_n={block_n}")
+    tiles = -(-n // tile_n)
+    padded = [_pad_rows(a, tiles * tile_n,
+                        False if a.dtype == jnp.bool_ else 0)
+              for a in arrays]
+
+    def body(t, carry):
+        cut = [jax.lax.dynamic_slice_in_dim(a, t * tile_n, tile_n, 0)
+               for a in padded]
+        return tuple(tile_fn(*cut, *carry))
+
+    return jax.lax.fori_loop(0, tiles, body, tuple(seed))
+
+
 # -------------------------------------------------------- f32 conveniences
 
 def f32_bits(x: jnp.ndarray) -> jnp.ndarray:

@@ -81,14 +81,8 @@ def plane_hit(coords_axis, levels, position: float, dtype):
 
 # ------------------------------------------------------------ slice kernel
 
-def _slice_kernel(u0_ref, v0_ref, px_ref, lvl_ref, val_ref, ok_ref,
-                  img_ref, depth_ref, *, block_n: int, resolution: int):
-    @pl.when(pl.program_id(0) == 0)
-    def _init():
-        img_ref[...] = jnp.full((resolution, resolution), jnp.nan,
-                                img_ref.dtype)
-        depth_ref[...] = jnp.full((resolution, resolution), -1, jnp.int32)
-
+def _slice_body(u0_ref, v0_ref, px_ref, lvl_ref, val_ref, ok_ref,
+                img_ref, depth_ref, *, block_n: int, resolution: int):
     rows = jax.lax.broadcasted_iota(jnp.int32, (resolution, resolution), 0)
     cols = jax.lax.broadcasted_iota(jnp.int32, (resolution, resolution), 1)
 
@@ -105,6 +99,36 @@ def _slice_kernel(u0_ref, v0_ref, px_ref, lvl_ref, val_ref, ok_ref,
         return 0
 
     jax.lax.fori_loop(0, block_n, body, 0)
+
+
+def _slice_kernel(u0_ref, v0_ref, px_ref, lvl_ref, val_ref, ok_ref,
+                  img_ref, depth_ref, *, block_n: int, resolution: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        img_ref[...] = jnp.full((resolution, resolution), jnp.nan,
+                                img_ref.dtype)
+        depth_ref[...] = jnp.full((resolution, resolution), -1, jnp.int32)
+
+    _slice_body(u0_ref, v0_ref, px_ref, lvl_ref, val_ref, ok_ref,
+                img_ref, depth_ref, block_n=block_n, resolution=resolution)
+
+
+def _slice_carry_kernel(u0_ref, v0_ref, px_ref, lvl_ref, val_ref, ok_ref,
+                        img0_ref, depth0_ref, img_ref, depth_ref, *,
+                        block_n: int, resolution: int):
+    """Slice kernel seeded from a carried (image, depth) pair.
+
+    The seed is the partial result of earlier leaf-table tiles (the
+    tiled-gather formulation) — semantically the kernel behaves as if
+    the seed's leaves had been painted first, which they were.
+    """
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        img_ref[...] = img0_ref[...]
+        depth_ref[...] = depth0_ref[...]
+
+    _slice_body(u0_ref, v0_ref, px_ref, lvl_ref, val_ref, ok_ref,
+                img_ref, depth_ref, block_n=block_n, resolution=resolution)
 
 
 @functools.partial(jax.jit, static_argnames=("resolution", "block_n",
@@ -137,14 +161,43 @@ def slice_raster(u0, v0, px, lvl, val, ok, *, resolution: int,
     return img
 
 
+@functools.partial(jax.jit, static_argnames=("resolution", "block_n",
+                                             "interpret"))
+def slice_raster_carry(u0, v0, px, lvl, val, ok, img0, depth0, *,
+                       resolution: int, block_n: int = DEFAULT_BLOCK_N,
+                       interpret: bool = False):
+    """Seeded slice raster: paint one leaf-table tile over (img0, depth0).
+
+    Returns the updated ``(image, depth)`` pair. Seeding with an all-NaN
+    image and an all ``-1`` depth reproduces :func:`slice_raster` while
+    also returning the depth buffer (the mesh path's depth-resolve merge
+    needs it); chaining tiles in BFS order is bit-identical to one call
+    over the concatenated table.
+    """
+    n = u0.shape[-1]
+    assert n % block_n == 0, f"N={n} not padded to {block_n}"
+    grid = (n // block_n,)
+    tbl = pl.BlockSpec((1, block_n), lambda i: (0, i))
+    out = pl.BlockSpec((resolution, resolution), lambda i: (0, 0))
+    img, depth = pl.pallas_call(
+        functools.partial(_slice_carry_kernel, block_n=block_n,
+                          resolution=resolution),
+        grid=grid,
+        in_specs=[tbl] * 6 + [out, out],
+        out_specs=[out, out],
+        out_shape=[
+            jax.ShapeDtypeStruct((resolution, resolution), val.dtype),
+            jax.ShapeDtypeStruct((resolution, resolution), jnp.int32),
+        ],
+        interpret=interpret,
+    )(u0, v0, px, lvl, val, ok, img0, depth0)
+    return img, depth
+
+
 # ------------------------------------------------------- projection kernel
 
-def _proj_kernel(u0_ref, v0_ref, px_ref, contrib_ref, ok_ref, img_ref, *,
-                 block_n: int, resolution: int):
-    @pl.when(pl.program_id(0) == 0)
-    def _init():
-        img_ref[...] = jnp.zeros((resolution, resolution), img_ref.dtype)
-
+def _proj_body(u0_ref, v0_ref, px_ref, contrib_ref, ok_ref, img_ref, *,
+               block_n: int, resolution: int):
     rows = jax.lax.broadcasted_iota(jnp.int32, (resolution, resolution), 0)
     cols = jax.lax.broadcasted_iota(jnp.int32, (resolution, resolution), 1)
 
@@ -160,6 +213,26 @@ def _proj_kernel(u0_ref, v0_ref, px_ref, contrib_ref, ok_ref, img_ref, *,
         return 0
 
     jax.lax.fori_loop(0, block_n, body, 0)
+
+
+def _proj_kernel(u0_ref, v0_ref, px_ref, contrib_ref, ok_ref, img_ref, *,
+                 block_n: int, resolution: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        img_ref[...] = jnp.zeros((resolution, resolution), img_ref.dtype)
+
+    _proj_body(u0_ref, v0_ref, px_ref, contrib_ref, ok_ref, img_ref,
+               block_n=block_n, resolution=resolution)
+
+
+def _proj_carry_kernel(u0_ref, v0_ref, px_ref, contrib_ref, ok_ref,
+                       img0_ref, img_ref, *, block_n: int, resolution: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        img_ref[...] = img0_ref[...]
+
+    _proj_body(u0_ref, v0_ref, px_ref, contrib_ref, ok_ref, img_ref,
+               block_n=block_n, resolution=resolution)
 
 
 @functools.partial(jax.jit, static_argnames=("resolution", "block_n",
@@ -187,6 +260,34 @@ def projection_raster(u0, v0, px, contrib, ok, *, resolution: int,
                                        contrib.dtype),
         interpret=interpret,
     )(u0, v0, px, contrib, ok)
+
+
+@functools.partial(jax.jit, static_argnames=("resolution", "block_n",
+                                             "interpret"))
+def projection_raster_carry(u0, v0, px, contrib, ok, img0, *,
+                            resolution: int, block_n: int = DEFAULT_BLOCK_N,
+                            interpret: bool = False):
+    """Seeded projection raster: accumulate one tile over ``img0``.
+
+    Per-pixel adds still run in BFS leaf order, so chaining tiles in BFS
+    order reproduces :func:`projection_raster` over the concatenated
+    table bit for bit (same float accumulation sequence).
+    """
+    n = u0.shape[-1]
+    assert n % block_n == 0, f"N={n} not padded to {block_n}"
+    grid = (n // block_n,)
+    tbl = pl.BlockSpec((1, block_n), lambda i: (0, i))
+    out = pl.BlockSpec((resolution, resolution), lambda i: (0, 0))
+    return pl.pallas_call(
+        functools.partial(_proj_carry_kernel, block_n=block_n,
+                          resolution=resolution),
+        grid=grid,
+        in_specs=[tbl] * 5 + [out],
+        out_specs=out,
+        out_shape=jax.ShapeDtypeStruct((resolution, resolution),
+                                       contrib.dtype),
+        interpret=interpret,
+    )(u0, v0, px, contrib, ok, img0)
 
 
 # -------------------------------------------------------- histogram kernel

@@ -84,12 +84,15 @@ def _level_pix(coords2, resolution: int, lvl: int):
     return u0 * resolution + v0
 
 
-def slice_raster_ref(coords2, c_axis, levels, values, ok, *,
-                     position: float, resolution: int, n_levels: int):
-    """Oracle for the slice kernel: deepest-covering-leaf painting.
+def slice_raster_ref_unfused(coords2, c_axis, levels, values, ok, *,
+                             position: float, resolution: int,
+                             n_levels: int):
+    """Per-level-scatter slice oracle (the pre-fusion formulation).
 
-    ``coords2`` is the (N, 2) in-plane coords, ``c_axis`` the (N,) coord
-    along the slice axis. Resolution must be a power of two.
+    Kept for the bench's before/after record and as a parity
+    cross-check: every level runs a full-table scatter, so the cost is
+    ``n_levels`` sequential passes over all N rows —
+    :func:`slice_raster_ref` fuses them into one.
     """
     r = resolution
     k = r.bit_length() - 1
@@ -117,8 +120,97 @@ def slice_raster_ref(coords2, c_axis, levels, values, ok, *,
     return img
 
 
+def _slice_pyramid(coords2, c_axis, levels, values, ok, *,
+                   position: float, resolution: int, n_levels: int):
+    """One fused scatter of every node into a per-level pyramid buffer.
+
+    The per-level formulation above runs ``n_levels`` full-table scatter
+    passes (each O(N) sequential updates on CPU) — the dominant cost at
+    512² on multi-million-node trees. Here every node computes its own
+    (level-base + cell) target up front, so a *single* value scatter and
+    a single painted-mask scatter cover all levels; XLA CPU applies the
+    duplicate updates (fine levels, trash slot) in row order, preserving
+    the BFS later-overrides semantics exactly. Returns the flat value
+    buffer, painted buffer and the static per-level base offsets.
+    """
+    r = resolution
+    k = r.bit_length() - 1
+    bases, off = [], 0
+    for lvl in range(n_levels):
+        g = 1 << min(lvl, k)
+        bases.append(off)
+        off += g * g
+    lvl32 = levels.astype(jnp.int32)
+    size = jnp.asarray(2.0, values.dtype) ** (-lvl32.astype(values.dtype))
+    lo = c_axis.astype(values.dtype) * size
+    sel = (ok & (lo <= position) & (position < lo + size)
+           & (lvl32 >= 0) & (lvl32 < n_levels))
+    safe = jnp.clip(lvl32, 0, n_levels - 1)
+    dn = jnp.maximum(safe - k, 0)
+    g_l = jnp.int32(1) << jnp.minimum(safe, k)
+    cell = ((coords2[:, 0].astype(jnp.int32) >> dn) * g_l
+            + (coords2[:, 1].astype(jnp.int32) >> dn))
+    base = jnp.asarray(bases, jnp.int32)[safe]
+    idx = jnp.where(sel, base + cell, off)
+    buf = jnp.full(off + 1, jnp.nan, values.dtype).at[idx].set(values)
+    hit = jnp.zeros(off + 1, bool).at[idx].set(sel)
+    return buf, hit, bases
+
+
+def slice_raster_ref(coords2, c_axis, levels, values, ok, *,
+                     position: float, resolution: int, n_levels: int):
+    """Oracle for the slice kernel: deepest-covering-leaf painting.
+
+    ``coords2`` is the (N, 2) in-plane coords, ``c_axis`` the (N,) coord
+    along the slice axis. Resolution must be a power of two. Fused
+    single-scatter formulation (see :func:`_slice_pyramid`); composing
+    the pyramid coarse-to-fine with a painted-mask ``where`` reproduces
+    the per-level ascending overrides bit for bit.
+    """
+    img, _ = slice_raster_depth_ref(
+        coords2, c_axis, levels, values, ok, position=position,
+        resolution=resolution, n_levels=n_levels)
+    return img
+
+
+def slice_raster_depth_ref(coords2, c_axis, levels, values, ok, *,
+                           position: float, resolution: int, n_levels: int,
+                           init=None):
+    """Depth-tracking slice oracle, optionally seeded from ``init``.
+
+    Returns ``(image, depth)`` where ``depth`` holds the painting leaf's
+    level (-1 where unpainted) — the mesh path's depth-resolve merge and
+    the tiled-gather carry both need it. ``init=(img0, depth0)`` seeds
+    the paint: a level-``l`` candidate only lands where ``l >= depth0``,
+    which is exactly the carry kernel's gate (within one level every
+    candidate shares ``l``, so per-pixel gating is uniform and the
+    last-set-in-BFS-order winner is unchanged).
+    """
+    r = resolution
+    k = r.bit_length() - 1
+    buf, hitbuf, bases = _slice_pyramid(
+        coords2, c_axis, levels, values, ok, position=position,
+        resolution=resolution, n_levels=n_levels)
+    if init is None:
+        img = jnp.full((r, r), jnp.nan, values.dtype)
+        depth = jnp.full((r, r), -1, jnp.int32)
+    else:
+        img, depth = init
+    for lvl in range(n_levels):
+        g = 1 << min(lvl, k)
+        px = r // g
+        grid = buf[bases[lvl]:bases[lvl] + g * g].reshape(g, g)
+        hit = hitbuf[bases[lvl]:bases[lvl] + g * g].reshape(g, g)
+        up_val = jnp.repeat(jnp.repeat(grid, px, 0), px, 1)
+        up_hit = jnp.repeat(jnp.repeat(hit, px, 0), px, 1)
+        take = up_hit & (lvl >= depth)
+        img = jnp.where(take, up_val, img)
+        depth = jnp.where(take, jnp.int32(lvl), depth)
+    return img, depth
+
+
 def projection_raster_ref(coords2, levels, values, ok, *,
-                          resolution: int, n_levels: int):
+                          resolution: int, n_levels: int, init=None):
     """Oracle for the projection kernel: field * path-length column sum.
 
     Unlike the slice, a projection collapses one axis: several leaves
@@ -130,10 +222,17 @@ def projection_raster_ref(coords2, levels, values, ok, *,
     earlier (coarser) levels wrote values constant over this level's
     cells — and the result is replicated back; XLA CPU applies the
     scatter's duplicate updates in order, like ``np.add.at``.
+
+    ``init`` seeds the accumulator (tiled-gather carry). The coarse
+    view then requires the seed to be constant over the cells this
+    pass actually *touches* — true for tile chaining, where the seed is
+    the same rasterization's earlier-tile partial (BFS order ⇒ the seed
+    holds only coarser-or-equal levels than any selected row); cells no
+    selected row touches keep their pixels verbatim instead.
     """
     r = resolution
     k = r.bit_length() - 1
-    img = jnp.zeros((r, r), values.dtype)
+    img = jnp.zeros((r, r), values.dtype) if init is None else init
     zero = jnp.zeros((), values.dtype)
     for lvl in range(n_levels):
         sel = ok & (levels == lvl)
@@ -144,8 +243,17 @@ def projection_raster_ref(coords2, levels, values, ok, *,
             flat = jnp.concatenate([img[::px, ::px].reshape(-1),
                                     jnp.zeros(1, values.dtype)])
             flat = flat.at[idx].add(jnp.where(sel, contrib, zero))
-            img = jnp.repeat(jnp.repeat(flat[:-1].reshape(g, g),
-                                        px, 0), px, 1)
+            # replicate only into cells some selected leaf touched: an
+            # untouched cell keeps its running pixels verbatim, so a
+            # carry seed holding *finer* levels than this pass (tile
+            # chaining starts the level loop from 0 every tile) is never
+            # flattened to its top-left subsample
+            hit = jnp.zeros(g * g + 1, bool).at[idx].max(sel)
+            up = jnp.repeat(jnp.repeat(flat[:-1].reshape(g, g), px, 0),
+                            px, 1)
+            uph = jnp.repeat(jnp.repeat(hit[:-1].reshape(g, g), px, 0),
+                             px, 1)
+            img = jnp.where(uph, up, img)
         else:
             idx = jnp.where(sel, _level_pix(coords2, r, lvl), r * r)
             flat = jnp.concatenate(

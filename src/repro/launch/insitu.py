@@ -60,6 +60,12 @@ def main(argv=None):
                    help="stage snapshots on the accelerator and reduce "
                         "with the Pallas raster kernels; only reduced "
                         "objects cross the device->host boundary")
+    p.add_argument("--device-mesh", type=int, default=0, metavar="N",
+                   help="shard each snapshot's leaf table over N jax "
+                        "devices and reduce under shard_map with an "
+                        "on-device merge tree (0 = off; on CPU force "
+                        "devices with XLA_FLAGS="
+                        "--xla_force_host_platform_device_count=N)")
     p.add_argument("--lane-pool", action="store_true",
                    help="with --backend process: borrow lanes from the "
                         "persistent module pool instead of spawning")
@@ -79,20 +85,25 @@ def main(argv=None):
         from ..obs import TRACER
         TRACER.enable()
 
+    if args.device_mesh and args.device_reduce:
+        p.error("--device-mesh and --device-reduce are exclusive paths")
+
     shutil.rmtree(args.out, ignore_errors=True)
     reducers = default_reducers(args.resolution, args.lod, args.domains)
+    device_reduce = "mesh" if args.device_mesh else args.device_reduce
     engine = InTransitEngine(
         args.out, reducers,
         output_every=args.output_every, workers=args.workers,
         queue_capacity=args.queue_capacity, policy=args.policy,
         domains=args.domains, backend=args.backend,
-        device_reduce=args.device_reduce,
+        device_reduce=device_reduce,
+        mesh_devices=args.device_mesh or None,
         lane_pool=args.lane_pool).start()
 
     print(f"== compute flow: {args.steps} Sedov steps "
           f"(policy={args.policy}, output_every={args.output_every}, "
           f"domains={args.domains}, backend={args.backend}, "
-          f"device_reduce={args.device_reduce})")
+          f"device_reduce={device_reduce})")
     t_compute = t_submit = 0.0
     for s in range(1, args.steps + 1):
         t0 = time.perf_counter()
@@ -124,6 +135,16 @@ def main(argv=None):
               f"vs {staged/1e6:.2f} MB staged on device "
               f"({ds['device_objects']} device objects, "
               f"fallback_runs={ds['fallback_runs']})")
+    if args.device_mesh:
+        ds = engine.device_stats
+        print(f"   mesh reduce[{ds['mesh_devices']}d]: "
+              f"peak_leaf_frac={ds['peak_leaf_frac']:.3f} "
+              f"({ds['leaf_rows']} rows total, "
+              f"peak table {ds['peak_device_table_bytes']/1e6:.2f} MB + "
+              f"partial {ds['peak_device_partial_bytes']/1e6:.2f} MB "
+              f"per device; {ds['bytes_tables_to_device']/1e6:.2f} MB "
+              f"sharded up, {ds['bytes_reduced_to_host']/1e6:.2f} MB "
+              f"reduced down, fallback_runs={ds['fallback_runs']})")
     tel = engine.telemetry()
     tot = tel["staging"]["totals"]
     print(f"   telemetry[{tel['backend']}]: accepted={tot['accepted']} "

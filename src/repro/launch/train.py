@@ -57,6 +57,10 @@ def main(argv=None):
     p.add_argument("--insitu-device-reduce", action="store_true",
                    help="stage train-state snapshots on the accelerator "
                         "(zero-copy) and transfer only reduced objects")
+    p.add_argument("--insitu-device-mesh", type=int, default=0,
+                   metavar="N",
+                   help="shard in-transit AMR reductions over N jax "
+                        "devices (shard_map + on-device merge; 0 = off)")
     p.add_argument("--insitu-trace-out", default=None, metavar="PATH",
                    help="record in-transit spans and write a Chrome-trace "
                         "JSON (Perfetto) when training finishes")
@@ -82,6 +86,7 @@ def main(argv=None):
         insitu_domains=args.insitu_domains,
         insitu_backend=args.insitu_backend,
         insitu_device_reduce=args.insitu_device_reduce,
+        insitu_device_mesh=args.insitu_device_mesh,
         insitu_trace_out=args.insitu_trace_out,
         seed=args.seed)
     trainer.run(args.steps)

@@ -63,6 +63,7 @@ class Trainer:
                  insitu_reducers=None, insitu_policy: str = "drop-oldest",
                  insitu_domains: int = 1, insitu_backend: str = "thread",
                  insitu_device_reduce: bool = False,
+                 insitu_device_mesh: int = 0,
                  insitu_trace_out: str | None = None):
         self.lm = lm
         self.cfg = lm.cfg
@@ -103,7 +104,9 @@ class Trainer:
                 insitu_dir, reducers, output_every=insitu_every,
                 policy=insitu_policy, ncf=ncf, domains=insitu_domains,
                 backend=insitu_backend,
-                device_reduce=insitu_device_reduce)
+                device_reduce="mesh" if insitu_device_mesh
+                else insitu_device_reduce,
+                mesh_devices=insitu_device_mesh or None)
         self.insitu_trace_out = insitu_trace_out
         if insitu_trace_out and self.insitu is not None:
             from ..obs import TRACER

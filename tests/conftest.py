@@ -6,3 +6,5 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# repo root: makes the benchmarks package importable (diff_records tests)
+sys.path.insert(1, os.path.join(os.path.dirname(__file__), ".."))

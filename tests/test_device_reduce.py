@@ -93,10 +93,11 @@ def test_device_impl_registry_fallback_configs():
     assert device_impl_for(SliceReducer(resolution=64)) is not None
     # non-power-of-two resolution: integer pixel geometry doesn't apply
     assert device_impl_for(SliceReducer(resolution=100)) is None
-    # upstream source: the LOD cut runs on host
+    # upstream source: runs on host from the upstream's output
     assert device_impl_for(
         SliceReducer(resolution=64, source="lod2")) is None
-    assert device_impl_for(LODCutReducer(max_level=2)) is None
+    # the LOD cut is a BFS prefix slice: device impl since PR 9
+    assert device_impl_for(LODCutReducer(max_level=2)) is not None
     assert device_impl_for(ProjectionReducer(resolution=48)) is None
     assert device_impl_for(LevelHistogramReducer()) is not None
 
@@ -156,8 +157,9 @@ def test_device_staging_drop_oldest_parity():
 
 def test_engine_device_reduce_bit_identical(tmp_path):
     """device_reduce=True writes a catalog bit-identical to the host
-    path, transfers less than the full snapshot, and host-falls-back
-    only for the reducer without a device impl (the LOD cut)."""
+    path, transfers less than the full snapshot, and never materializes
+    a full snapshot on host (every default reducer has a device impl
+    since the PR 9 LOD cut)."""
     tree = random_tree(11)
     mk = lambda: [  # noqa: E731
         SliceReducer(field="density", resolution=64),
@@ -176,7 +178,8 @@ def test_engine_device_reduce_bit_identical(tmp_path):
         if mode:
             ds = eng.device_stats
             assert ds["snapshots"] == 2
-            assert set(ds["fallback_runs"]) == {"lod2"}
+            assert not ds["fallback_runs"]
+            assert ds["fallback_snapshots"] == 0
             assert 0 < ds["bytes_to_host"]
         else:
             assert eng.device_stats is None

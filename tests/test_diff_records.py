@@ -1,0 +1,103 @@
+"""Bench-trajectory diff tool (benchmarks.diff_records).
+
+The unit classifier decides regression direction: cost units (µs,
+bytes, pct, frac) warn when the value goes *up*, benefit units (x,
+ratio, speedup, qps) warn when it goes *down*. The match is on the
+unit's last ``_`` token — ``bytes_per_step_max`` ends with ``x`` but is
+a cost, and ``frac`` is a cost; both were previously misclassified by a
+suffix match.
+"""
+import json
+
+import pytest
+
+from benchmarks.diff_records import _is_benefit, diff, load_records, main
+
+
+def _rec(name, value, unit="us_per_call"):
+    return {"name": name, "value": value, "unit": unit}
+
+
+@pytest.mark.parametrize("unit,benefit", [
+    ("x", True), ("ratio", True), ("speedup", True), ("qps", True),
+    ("us_per_call", False), ("bytes_per_step", False), ("pct", False),
+    ("ms", False),
+    # the token-vs-suffix distinction this classifier exists for:
+    ("frac", False),                 # residency fraction: lower = better
+    ("bytes_per_step_max", False),   # ends with "x" but is a cost
+    ("latency_max", False),
+    ("mesh_vs_single_x", True),      # last token exactly "x"
+    ("write_qps", True),
+])
+def test_unit_classification(unit, benefit):
+    assert _is_benefit(_rec("r", 1.0, unit)) is benefit
+
+
+def test_cost_regression_warns_on_increase():
+    old = {"a": _rec("a", 100.0)}
+    new = {"a": _rec("a", 150.0)}
+    _, warnings = diff(old, new, warn_pct=20.0)
+    assert len(warnings) == 1 and "a:" in warnings[0]
+    _, warnings = diff(new, old, warn_pct=20.0)   # got faster: no warning
+    assert not warnings
+
+
+def test_benefit_regression_warns_on_decrease():
+    old = {"a": _rec("a", 10.0, unit="x")}
+    new = {"a": _rec("a", 5.0, unit="x")}
+    _, warnings = diff(old, new, warn_pct=20.0)
+    assert len(warnings) == 1
+    _, warnings = diff(new, old, warn_pct=20.0)   # ratio improved
+    assert not warnings
+
+
+def test_frac_increase_is_a_regression():
+    """Higher per-device residency fraction must warn (it would not
+    under the old suffix rule only because 'frac' lacks an 'x' — but a
+    hypothetical benefit match would invert the direction)."""
+    old = {"f": _rec("f", 0.25, unit="frac")}
+    new = {"f": _rec("f", 0.55, unit="frac")}
+    _, warnings = diff(old, new, warn_pct=20.0)
+    assert len(warnings) == 1
+
+
+def test_max_suffixed_cost_unit_warns_in_cost_direction():
+    old = {"m": _rec("m", 100.0, unit="bytes_per_step_max")}
+    new = {"m": _rec("m", 200.0, unit="bytes_per_step_max")}
+    _, warnings = diff(old, new, warn_pct=20.0)
+    assert len(warnings) == 1, "cost unit ending in 'x' treated as benefit"
+
+
+def test_added_removed_and_zero_baseline_never_warn():
+    old = {"gone": _rec("gone", 5.0), "z": _rec("z", 0.0)}
+    new = {"new": _rec("new", 7.0), "z": _rec("z", 100.0)}
+    lines, warnings = diff(old, new, warn_pct=20.0)
+    assert not warnings
+    assert any("(new record)" in ln for ln in lines)
+    assert any("removed" in ln for ln in lines)
+    assert any("zero baseline" in ln for ln in lines)
+
+
+def _write(path, records):
+    path.write_text(json.dumps(
+        {"schema": "bench-record/v1", "records": records}))
+    return str(path)
+
+
+def test_main_end_to_end(tmp_path, capsys):
+    old = _write(tmp_path / "old.json",
+                 [_rec("a", 100.0), _rec("r", 10.0, unit="x")])
+    new = _write(tmp_path / "new.json",
+                 [_rec("a", 300.0), _rec("r", 10.0, unit="x")])
+    assert main([old, new]) == 0            # warnings don't fail by default
+    assert "REGRESSION" in capsys.readouterr().out
+    assert main([old, new, "--strict"]) == 1
+    assert main([old, old, "--strict"]) == 0
+
+
+def test_main_rejects_wrong_schema(tmp_path, capsys):
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"schema": "nope", "records": []}))
+    good = _write(tmp_path / "good.json", [_rec("a", 1.0)])
+    assert main([str(bad), good]) == 2
+    assert load_records(good)["a"]["value"] == 1.0
