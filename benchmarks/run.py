@@ -32,7 +32,11 @@ FLOORS = {"bench_api": 5.0,
 CEILINGS = {"insitu.obs_overhead_pct": 2.0,
             # sharded mesh reduction: no device may hold more than ~1/N
             # (+ padding slack) of the leaf table at the 4-device bench
-            "insitu.mesh_peak_leaf_frac": 0.6}
+            "insitu.mesh_peak_leaf_frac": 0.6,
+            # durable telemetry footprint (measures ~3 kB/step at the
+            # bench's per-batch flush cadence; 4x headroom): a ledger
+            # that silently bloats its flushes fails here, not in prod
+            "obs.ledger_bytes_per_step": 12288.0}
 
 #: record name -> minimum acceptable emitted value, same existence
 #: semantics as CEILINGS (today: the serving engine must coalesce a

@@ -52,6 +52,7 @@ from ..core import pyramid as pyr
 from ..hercule import api, codecs
 from ..hercule.checkpoint import _FLOATY, _leaf_paths, _slices_json
 from ..hercule.database import HerculeDB
+from ..obs import events as obs_events
 from ..obs import metrics as obs_metrics
 from ..obs.trace import TRACER
 from .lanes import make_backend
@@ -240,6 +241,10 @@ class AsyncCheckpointManager:
             if keep_prev:
                 new_prev[(name, domain)] = host
         mode = "full" if full else "delta"
+        if full and self.delta_every > 0 and self._prev_step is not None:
+            # a *scheduled* full over an existing delta chain = a rebase
+            obs_events.EVENTS.emit(obs_events.CKPT_REBASE, step=step,
+                                   chain_len=self._deltas_since_full)
         if keep_prev:
             self._prev = new_prev
             self._prev_step = step
@@ -338,6 +343,10 @@ class AsyncCheckpointManager:
                         self._order.remove(step)
                     self._committed += 1
                     self._done.notify_all()
+                obs_events.EVENTS.emit(
+                    obs_events.CKPT_COMMIT, step=step,
+                    mode=attrs.get("mode", "full"),
+                    n_records=len(records))
             except BaseException as e:    # noqa: BLE001
                 self._save_failed(step, e)
                 return
@@ -436,6 +445,25 @@ class AsyncCheckpointManager:
         return jax.tree_util.tree_unflatten(treedef, leaves), view.attrs
 
     # ------------------------------------------------------------ telemetry
+    def bind_ledger(self, ledger) -> None:
+        """Register this manager with a run ledger: its metrics become
+        a flush source and ``ckpt_stall_ratio`` — the fraction of wall
+        time the train thread spent stalled in ``save()`` since the
+        previous ledger sample — feeds the health rules."""
+        ledger.add_source("ckpt", self.obs.snapshot)
+        sample = {"t": time.monotonic(), "stall": 0.0}
+
+        def stall_ratio():
+            now = time.monotonic()
+            total = self.stall_seconds_total
+            dt, dstall = now - sample["t"], total - sample["stall"]
+            sample["t"], sample["stall"] = now, total
+            if dt <= 0:
+                return None
+            return min(1.0, max(0.0, dstall / dt))
+
+        ledger.add_signal("ckpt_stall_ratio", stall_ratio)
+
     @property
     def stall_seconds_total(self) -> float:
         """Cumulative train-thread time spent inside ``save()``."""

@@ -31,12 +31,13 @@ from __future__ import annotations
 
 import dataclasses
 import fnmatch
+import json
 
 import numpy as np
 
 from . import codecs
 from .database import (HerculeDB, Record, _dtype_of, decode_record,
-                       get_codec)
+                       get_codec, register_codec)
 
 __all__ = [
     "Selector", "as_selector", "ContextView", "ObjectKind", "KINDS",
@@ -623,10 +624,81 @@ class HProtShardKind(CkptShardKind):
         return f"{self.prefix}{tensor}"
 
 
+class TelemetryKind(ObjectKind):
+    """Run-ledger telemetry batches (``telemetry/<part>``).
+
+    The observability flavor of the paper's purpose-specific-format
+    lesson (DESIGN.md §19): each flush of :class:`repro.obs.ledger.
+    RunLedger` writes one ledger context whose records are JSON parts —
+    ``telemetry/meta``, ``telemetry/metrics``, ``telemetry/spans``,
+    ``telemetry/events``, ``telemetry/attrib``, ``telemetry/health`` —
+    and every writing process (trainer/engine, process lanes relayed
+    over the results queue, catalog server) lands its parts as its *own
+    Hercule domain*. ``assemble(domain=None)`` merges them back at read
+    exactly like the reduced kind: spans and events concatenate across
+    domains ordered by timestamp; metrics/attrib/health key by domain.
+    """
+
+    name = "telemetry"
+    prefix = "telemetry/"
+
+    #: parts whose per-domain payloads are event-shaped lists merged by
+    #: timestamp; the rest stay keyed by contributing domain
+    _CONCAT = {"spans": "ts", "events": "ts_us"}
+
+    def parse(self, record_name: str) -> dict:
+        return {"part": record_name[len(self.prefix):]}
+
+    def record_name(self, part: str) -> str:
+        return f"{self.prefix}{part}"
+
+    def write(self, ctx, domain: int, parts: dict, **opts) -> None:
+        """Write a dict of JSON-able parts as one domain's records."""
+        for part, payload in parts.items():
+            blob = json.dumps(payload).encode()
+            ctx.write_bytes(domain, self.record_name(part), blob,
+                            dtype="uint8", shape=(len(blob),),
+                            codec="json")
+
+    def _decode(self, view: ContextView, rec: Record):
+        return json.loads(view.db.read_payload(rec).decode())
+
+    def assemble(self, view: ContextView, domain: int | None = None,
+                 **opts) -> dict:
+        """Merge every domain's telemetry parts for one ledger context.
+
+        Returns ``{part: ...}``: span/event parts are one time-ordered
+        list across all (selected) domains; other parts map
+        ``{domain: payload}``.
+        """
+        out: dict = {}
+        for rec in view.select(names="telemetry/*", domains=domain):
+            part = self.parse(rec.name)["part"]
+            payload = self._decode(view, rec)
+            if part in self._CONCAT:
+                out.setdefault(part, []).extend(payload or [])
+            else:
+                out.setdefault(part, {})[rec.domain] = payload
+        for part, ts_key in self._CONCAT.items():
+            if part in out:
+                out[part].sort(key=lambda e: e.get(ts_key, 0.0))
+        return out
+
+
+def _decode_json_record(db, rec, payload):
+    # JSON records decode to a uint8 byte array at the record layer;
+    # TelemetryKind.assemble parses the actual objects
+    return np.frombuffer(payload, dtype=np.uint8)
+
+
+register_codec("json", decode=_decode_json_record)
+
+
 AMR_TREE = register_kind(AmrTreeKind())
 ANALYSIS = register_kind(AnalysisKind())
 REDUCED = register_kind(ReducedKind())
 HPROT_SHARD = register_kind(HProtShardKind())
+TELEMETRY = register_kind(TelemetryKind())
 CKPT_SHARD = register_kind(CkptShardKind(), fallback=True)
 
 

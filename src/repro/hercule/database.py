@@ -363,6 +363,15 @@ class HerculeDB:
         completely or stays invisible to every reader.
         """
         records = list(records)
+        # publish any appends made through *this* handle (DomainWriter
+        # in the committing process, e.g. a run-ledger flush) to the
+        # page cache first — fsync_files syncs by path and would
+        # otherwise durably commit a file whose tail still sits in a
+        # user-space buffer
+        with self._glock:
+            groups = list(self._groups.values())
+        for g in groups:
+            g.flush(sync=False)
         self.fsync_files(r.file for r in records)
         ctx_dir = self._ctx_dir(step)
         os.makedirs(ctx_dir, exist_ok=True)

@@ -45,6 +45,7 @@ import time
 from ..core.amr import AMRTree
 from ..hercule import api
 from ..hercule.database import HerculeDB
+from ..obs import events as obs_events
 from ..obs import metrics as obs_metrics
 from ..obs.trace import TRACER
 from .lanes import make_backend
@@ -79,7 +80,7 @@ class InTransitEngine:
                  step_ttl: float | None = None,
                  device_reduce: bool | str = False,
                  mesh_devices: int | None = None,
-                 lane_pool: bool = False):
+                 lane_pool: bool = False, ledger=None):
         from .lanes import BACKENDS
         if backend not in BACKENDS:   # before creating anything on disk
             raise ValueError(f"unknown lane backend {backend!r}; "
@@ -169,10 +170,83 @@ class InTransitEngine:
         self._h_commit = self.obs.histogram(
             "insitu_commit_seconds", "manifest commit latency")
         self.obs.register_callback(self._sync_obs)
+        #: flight-recorder state: backpressure edge detection, one-shot
+        #: crash dump, device-fallback event deltas
+        self._bp_block_seen = 0.0
+        self._bp_active = False
+        self._fallback_seen = 0
+        self._dumped = False
+        self.ledger = None
+        if ledger is not None:
+            self.bind_ledger(ledger)
 
     @property
     def backend(self) -> str:
         return self._backend.name
+
+    # ------------------------------------------------------------ run ledger
+    def bind_ledger(self, ledger) -> None:
+        """Attach a :class:`~repro.obs.ledger.RunLedger`: the engine
+        registers its metrics registry as a flush source and its health
+        signals, and lane telemetry relayed over the results queue is
+        forwarded into each lane's own ledger domain."""
+        self.ledger = ledger
+        ledger.add_source("engine", self.obs.snapshot)
+        ledger.add_signal("staging_pressure", self._sig_staging_pressure)
+        ledger.add_signal("backpressure", self._sig_backpressure)
+        ledger.add_signal(
+            "engine_failed",
+            lambda: float(self._failed + len(self._errors)))
+        if self._device is not None:
+            ledger.add_signal(
+                "device_fallbacks",
+                lambda: float(self._device.stats.fallback_snapshots))
+
+    def _sig_staging_pressure(self) -> float | None:
+        """Worst queue-fill fraction across the contributor groups."""
+        worst = None
+        for area in self.stages:
+            try:
+                frac = len(area) / max(1, area.capacity)
+            except Exception:           # noqa: BLE001 — unlinked shm area
+                continue
+            worst = frac if worst is None else max(worst, frac)
+        return worst
+
+    def _sig_backpressure(self) -> float:
+        """Fraction of wall time producers spent blocked since the last
+        sample (block policy; drop policies surface as evict events)."""
+        now = time.monotonic()
+        total = sum(a.stats.as_dict().get("block_seconds", 0.0)
+                    for a in self.stages)
+        last_t, last_b = getattr(self, "_bp_sample", (None, 0.0))
+        self._bp_sample = (now, total)
+        if last_t is None or now <= last_t:
+            return 0.0
+        return min(1.0, max(0.0, (total - last_b) / (now - last_t)))
+
+    def _note_backpressure(self) -> None:
+        """Edge-triggered backpressure events off the block-time stat:
+        enter when a submit paid block time, exit on the first submit
+        that didn't (runs on the producer thread, two counter reads)."""
+        total = 0.0
+        for area in self.stages:
+            try:
+                total += area.stats.block_seconds
+            except Exception:           # noqa: BLE001 — unlinked shm area
+                return
+        if total > self._bp_block_seen:
+            self._bp_block_seen = total
+            if not self._bp_active:
+                self._bp_active = True
+                obs_events.EVENTS.emit(
+                    obs_events.STAGING_BACKPRESSURE, state="enter",
+                    block_seconds=round(total, 6))
+        elif self._bp_active:
+            self._bp_active = False
+            obs_events.EVENTS.emit(
+                obs_events.STAGING_BACKPRESSURE, state="exit",
+                block_seconds=round(total, 6))
 
     # ----------------------------------------------------------- compute side
     def start(self) -> "InTransitEngine":
@@ -207,6 +281,7 @@ class InTransitEngine:
                                        trace=sp.context())
         if obs_metrics.ENABLED:
             self._h_submit.observe(time.perf_counter() - t0)
+            self._note_backpressure()
         return staged
 
     def submit_parts(self, step: int, parts, *, kind: str = "amr",
@@ -238,6 +313,7 @@ class InTransitEngine:
                                        trace=sp.context())
         if obs_metrics.ENABLED:
             self._h_submit.observe(time.perf_counter() - t0)
+            self._note_backpressure()
         return staged
 
     def submit_part(self, step: int, domain: int, payload, *,
@@ -288,6 +364,9 @@ class InTransitEngine:
                         trace=tctx)
                 else:
                     pend.touched = time.monotonic()
+            if pend is None:
+                obs_events.EVENTS.emit(obs_events.STEP_BEGIN, step=step,
+                                       parts=self.n_domains, kind=kind)
             if tctx is not None:
                 meta = {**(meta or {}), "_trace": tctx}
             with TRACER.span("stage.push", args={"step": step,
@@ -297,6 +376,7 @@ class InTransitEngine:
                     n_domains=self.n_domains)
         if obs_metrics.ENABLED:
             self._h_submit.observe(time.perf_counter() - t0)
+            self._note_backpressure()
         if not ok:
             self._part_done(step, None, None, defer_finalize=True)
         return ok
@@ -307,7 +387,8 @@ class InTransitEngine:
         # its part while later parts are still being staged
         with self._wlock:
             pend = self._pending.get(step)
-            if pend is None or pend.finalizing:
+            fresh = pend is None or pend.finalizing
+            if fresh:
                 # a finalizing pend is already off the countdown: the
                 # resubmission gets its own entry (and so its own
                 # ContextWriter — never append to a mid-serialization
@@ -318,6 +399,9 @@ class InTransitEngine:
             else:                      # resubmitted step: extend the countdown
                 pend.remaining += len(parts)
                 pend.touched = time.monotonic()
+        if fresh:
+            obs_events.EVENTS.emit(obs_events.STEP_BEGIN, step=step,
+                                   parts=len(parts), kind=kind)
         if trace is not None:
             # the submit span rides the snapshot meta across the lane
             # boundary (shm JSON header), so lane-side spans link to it
@@ -360,6 +444,8 @@ class InTransitEngine:
         Runs on the pushing (compute) thread, so a completed countdown
         is deferred — lanes (or :meth:`drain`) commit it.
         """
+        obs_events.EVENTS.emit(obs_events.STAGING_EVICT, step=snap.step,
+                               group=snap.domain)
         self._part_done(snap.step, None, None, defer_finalize=True)
 
     def _reduce_and_write(self, snap: Snapshot):
@@ -542,12 +628,17 @@ class InTransitEngine:
                 self._failed += 1
                 if self._pending.get(step) is pend:   # a resubmission
                     del self._pending[step]           # may own the slot
+            obs_events.EVENTS.dump("engine.commit_failed", step=step,
+                                   error=repr(e))
             return
         with self._wlock:
             self._written.append(step)
             self._committed.add(step)
             if self._pending.get(step) is pend:
                 del self._pending[step]
+        obs_events.EVENTS.emit(obs_events.STEP_COMMIT, step=step,
+                               domains=sorted(pend.wrote),
+                               partial=len(pend.wrote) < self.n_domains)
 
     def _run_deferred(self) -> None:
         """Commit contexts whose countdown completed on a compute thread."""
@@ -619,6 +710,11 @@ class InTransitEngine:
             "device": self.device_stats,
             "writes": {"contexts_committed": lanes["written_steps"],
                        "last_step": last},
+            "trace": {"spans_dropped": TRACER.spans_dropped,
+                      "max_spans": TRACER.max_spans,
+                      "events_dropped": obs_events.EVENTS.dropped},
+            "ledger": None if self.ledger is None
+            else self.ledger.telemetry(),
             "metrics": self.obs.snapshot(),
         }
 
@@ -645,11 +741,25 @@ class InTransitEngine:
                                "lane backend counter").set(v)
         if self._device is not None:
             for k, v in self._device.stats.as_dict().items():
-                self.obs.gauge(f"insitu_device_{k}",
-                               "device reduce counter").set(v)
+                if isinstance(v, (int, float)) and not isinstance(v, bool):
+                    self.obs.gauge(f"insitu_device_{k}",
+                                   "device reduce counter").set(v)
+            n_fallback = self._device.stats.fallback_snapshots
+            if n_fallback > self._fallback_seen:
+                obs_events.EVENTS.emit(
+                    obs_events.DEVICE_FALLBACK,
+                    snapshots=n_fallback - self._fallback_seen,
+                    total=n_fallback)
+                self._fallback_seen = n_fallback
 
     def check_errors(self) -> None:
         if self._errors:
+            if not self._dumped:
+                # first surfacing of an engine failure: flush the flight
+                # recorder so the postmortem has the final window on disk
+                self._dumped = True
+                obs_events.EVENTS.dump(
+                    "engine.failed", error=repr(self._errors[0]))
             raise RuntimeError("in-transit reduction failed") \
                 from self._errors[0]
 

@@ -34,6 +34,7 @@ import traceback
 
 from ..hercule import api
 from ..hercule.database import DomainWriter, HerculeDB, Record
+from ..obs import events as obs_events
 from ..obs import metrics as obs_metrics
 from ..obs.trace import TRACER, Tracer, now_us
 from .reducers import ReducerDAG
@@ -188,10 +189,14 @@ def _lane_main(handle, root: str, group: int, reducers, compress: bool,
                durable_parts: bool, results, lane_stats=None) -> None:
     """One process lane: attach shm staging, reduce, write own domain.
 
-    Results-queue wire format (9-tuples; spans/timings/stats may be
-    None): ``(tag, step, group, records, reducers, meta_or_tb, meta,
-    spans, timings)`` for "done"; errors carry the traceback in slot 5;
-    "exit" carries the lane's cumulative stats dict in slot 8.
+    Results-queue wire format (10-tuples; spans/timings/stats/events may
+    be None): ``(tag, step, group, records, reducers, meta_or_tb, meta,
+    spans, timings, events)`` for "done"; errors carry the traceback in
+    slot 5; "exit" carries the lane's cumulative stats dict in slot 8.
+    Slot 9 ships the lane's flight-recorder drain (its process-local
+    event ring since the previous message — e.g. ``lane.error`` on a
+    failed reduce), which the collector relays into the lane's own
+    domain of the run ledger.
 
     ``reducers`` may be a prebuilt :class:`ReducerDAG` (pooled lanes
     pass their fingerprint-cached DAG) or a reducer list. When a popped
@@ -205,6 +210,16 @@ def _lane_main(handle, root: str, group: int, reducers, compress: bool,
         else ReducerDAG(reducers)
     db = HerculeDB.open(root)
     tracer = Tracer(enabled=True)    # only used when _trace rides in
+    # incremental drain of this process's event ring: each message home
+    # carries only the events since the previous one (pooled lanes skip
+    # events from earlier jobs by starting the mark at the current head)
+    ev_mark = obs_events.EVENTS.drain_since(0)[0] if lane_stats else 0
+
+    def drain_events():
+        nonlocal ev_mark
+        ev_mark, evs = obs_events.EVENTS.drain_since(ev_mark)
+        return evs or None
+
     try:
         while True:
             t_pop = now_us()
@@ -214,8 +229,11 @@ def _lane_main(handle, root: str, group: int, reducers, compress: bool,
                 # a transport failure is fatal for the lane: report it
                 # (a bare exit would look clean to the collector while
                 # this group's queued steps never settle)
+                obs_events.EVENTS.emit(obs_events.LANE_ERROR, step=-1,
+                                       group=group, stage="transport")
                 results.put(("error", -1, group, None, None,
-                             traceback.format_exc(), None, None, None))
+                             traceback.format_exc(), None, None, None,
+                             drain_events()))
                 return
             if snap is None:
                 if area.closed and len(area) == 0:
@@ -228,7 +246,7 @@ def _lane_main(handle, root: str, group: int, reducers, compress: bool,
                 r1 = now_us()
                 if not outputs:
                     results.put(("skipped", snap.step, group, None, None,
-                                 None, None, None, None))
+                                 None, None, None, None, drain_events()))
                 else:
                     ctx = DomainWriter(db, snap.step)
                     w0 = now_us()
@@ -255,17 +273,23 @@ def _lane_main(handle, root: str, group: int, reducers, compress: bool,
                         "done", snap.step, group,
                         [r.to_json() for r in ctx.records],
                         sorted(outputs), snap.kind, snap.meta,
-                        spans, ((r1 - r0) / 1e6, (w1 - w0) / 1e6)))
+                        spans, ((r1 - r0) / 1e6, (w1 - w0) / 1e6),
+                        drain_events()))
             except BaseException:
+                obs_events.EVENTS.emit(obs_events.LANE_ERROR,
+                                       step=snap.step, group=group,
+                                       stage="reduce")
                 results.put(("error", snap.step, group, None, None,
-                             traceback.format_exc(), None, None, None))
+                             traceback.format_exc(), None, None, None,
+                             drain_events()))
             finally:
                 area.release(snap)
     finally:
         db.close()
         area.detach()
         results.put(("exit", None, group, None, None, None, None, None,
-                     dict(lane_stats) if lane_stats else None))
+                     dict(lane_stats) if lane_stats else None,
+                     drain_events()))
 
 
 _DAG_CACHE_MAX = 8
@@ -302,9 +326,9 @@ def _pooled_lane_main(task_q, sync, results) -> None:
                 results.put(("error", -1, group, None, None,
                              f"pooled lane has no cached DAG for "
                              f"fingerprint {fp} and got no reducers",
-                             None, None, None))
+                             None, None, None, None))
                 results.put(("exit", None, group, None, None, None, None,
-                             None, dict(stats)))
+                             None, dict(stats), None))
                 continue
             while len(dag_cache) >= _DAG_CACHE_MAX:   # bound residency
                 dag_cache.pop(next(iter(dag_cache)))
@@ -541,6 +565,8 @@ class ProcessLaneBackend(LaneBackend):
                     self._check_lanes()
                 continue
             tag, step, group = msg[0], msg[1], msg[2]
+            if len(msg) > 9 and msg[9]:
+                self._relay_events(group, msg[9])
             if tag == "exit":
                 self._exited.add(group)
                 if msg[8]:               # pooled lane lifetime stats
@@ -551,7 +577,7 @@ class ProcessLaneBackend(LaneBackend):
                     eng._run_deferred()
                     return
             elif tag == "done":
-                _, _, _, recs, reducers, kind, meta, spans, timings = msg
+                recs, reducers, kind, meta, spans, timings = msg[3:9]
                 if spans:                # lane spans join the parent trace
                     TRACER.ingest(spans)
                 if timings is not None and obs_metrics.ENABLED:
@@ -578,6 +604,17 @@ class ProcessLaneBackend(LaneBackend):
                     eng._part_done(step, None, None)
             eng._run_deferred()
 
+    def _relay_events(self, group: int, evs: list) -> None:
+        """Land a lane's flight-recorder drain: into its own ledger
+        domain when a run ledger is bound, else into the engine-process
+        ring so the events at least stay live-visible."""
+        led = self.engine.ledger
+        if led is not None:
+            from ..obs.ledger import lane_domain
+            led.ingest_domain(lane_domain(group), {"events": evs})
+        else:
+            obs_events.EVENTS.ingest(evs)
+
     def _check_lanes(self) -> None:
         """Surface lanes that died without reporting (crash semantics).
 
@@ -594,6 +631,15 @@ class ProcessLaneBackend(LaneBackend):
                 # fail fast instead of deadlocking a block-policy
                 # producer against a lane that will never pop again
                 self.stages[g].close()
+                # flight recorder: a SIGKILLed lane reports nothing, so
+                # the engine writes the crash event on its behalf and
+                # forces a durable ledger flush with whatever partial
+                # attribution the dead lane's steps have
+                obs_events.EVENTS.emit(
+                    obs_events.LANE_CRASH, group=g,
+                    exitcode=p.exitcode)
+                obs_events.EVENTS.dump("lane.crash", group=g,
+                                       exitcode=p.exitcode)
 
     def telemetry(self) -> dict:
         out = {"kind": "process", "pooled": self._pooled,

@@ -54,6 +54,7 @@ import numpy as np
 
 from ..core import fpdelta, pyramid
 from ..hercule.codecs import _block_to_bytes, _blocks_from_bytes
+from ..obs import events as obs_events
 from ..obs import metrics as obs_metrics
 from .catalog import _crop, _normalize_region
 
@@ -211,6 +212,10 @@ class ServeEngine:
             else:
                 if self._pending >= self.capacity():
                     self._m_rejected.inc()
+                    obs_events.EVENTS.emit(
+                        obs_events.SERVE_429, step=step, reducer=reducer,
+                        pending=self._pending,
+                        retry_after=self.retry_after())
                     raise ServeOverloaded(self.retry_after())
                 fl = self._inflight[key] = _Flight()
                 fl.regions.add(region)

@@ -275,6 +275,27 @@ class CatalogServer:
         self.host, self.port = self.httpd.server_address[:2]
         self._thread: threading.Thread | None = None
 
+    def bind_ledger(self, ledger) -> None:
+        """Register this server with a run ledger (its own, when run as
+        a standalone process — ``launch/catalog_serve.py --ledger`` —
+        or the trainer's in embedded use): metrics become a flush
+        source; ``serve_p99_ms`` (worst per-endpoint request p99 in ms)
+        feeds the health rules."""
+        ledger.add_source("server", self.obs.snapshot)
+        hist = self.obs.histogram(
+            "catalog_request_seconds", "request handling latency",
+            labels=("endpoint",))
+
+        def p99_ms():
+            worst = None
+            for _, child in hist.children():
+                if child.count:
+                    q = child.quantile(0.99) * 1e3
+                    worst = q if worst is None else max(worst, q)
+            return worst
+
+        ledger.add_signal("serve_p99_ms", p99_ms)
+
     def _sync_obs(self) -> None:
         """Mirror the shared catalog's cache counters into gauges."""
         cat = self.catalog

@@ -360,6 +360,13 @@ def main(argv=None):
     p.add_argument("--load", type=int, default=0, metavar="N",
                    help="with --selftest: also run the load test with N "
                         "concurrent clients")
+    p.add_argument("--ledger", action="store_true",
+                   help="write this server's telemetry (metrics, serve "
+                        "events, health) into <root>/telemetry/ as its "
+                        "own ledger domain, merged at read with the "
+                        "trainer's flushes")
+    p.add_argument("--ledger-interval", type=float, default=5.0,
+                   help="seconds between background ledger flushes")
     args = p.parse_args(argv)
 
     import os
@@ -382,9 +389,16 @@ def main(argv=None):
                         serve_workers=args.serve_workers,
                         max_pending=args.max_pending,
                         max_connections=args.max_connections)
+    ledger = None
+    if args.ledger:
+        from ..obs import RunLedger
+        ledger = RunLedger(args.root, "server",
+                           interval=args.ledger_interval)
+        srv.bind_ledger(ledger)
     print(f"catalog server on {srv.url} (root={args.root}, "
           f"cache={args.cache_entries} entries, "
-          f"compress={args.compress}, auth={'on' if token else 'off'}) "
+          f"compress={args.compress}, auth={'on' if token else 'off'}, "
+          f"ledger={'on' if ledger else 'off'}) "
           f"— Ctrl-C to stop")
     try:
         srv.serve_forever()
@@ -392,6 +406,8 @@ def main(argv=None):
         pass
     finally:
         srv.close()
+        if ledger is not None:
+            ledger.close()
     return 0
 
 

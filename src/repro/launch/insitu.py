@@ -79,9 +79,16 @@ def main(argv=None):
                         "reduce -> write -> commit, across process lanes) "
                         "and write a Chrome-trace JSON loadable in "
                         "Perfetto / chrome://tracing")
+    p.add_argument("--ledger", action="store_true",
+                   help="persist a run ledger (metrics/spans/events/"
+                        "attribution/health) into <out>/telemetry/; "
+                        "inspect with python -m repro.launch.obs")
+    p.add_argument("--ledger-interval", type=float, default=1.0,
+                   help="seconds between background ledger flushes "
+                        "(0 = flush only at exit)")
     args = p.parse_args(argv)
 
-    if args.trace_out:
+    if args.trace_out or args.ledger:
         from ..obs import TRACER
         TRACER.enable()
 
@@ -89,6 +96,11 @@ def main(argv=None):
         p.error("--device-mesh and --device-reduce are exclusive paths")
 
     shutil.rmtree(args.out, ignore_errors=True)
+    ledger = None
+    if args.ledger:
+        from ..obs import RunLedger
+        ledger = RunLedger(args.out, "trainer",
+                           interval=args.ledger_interval)
     reducers = default_reducers(args.resolution, args.lod, args.domains)
     device_reduce = "mesh" if args.device_mesh else args.device_reduce
     engine = InTransitEngine(
@@ -98,7 +110,7 @@ def main(argv=None):
         domains=args.domains, backend=args.backend,
         device_reduce=device_reduce,
         mesh_devices=args.device_mesh or None,
-        lane_pool=args.lane_pool).start()
+        lane_pool=args.lane_pool, ledger=ledger).start()
 
     print(f"== compute flow: {args.steps} Sedov steps "
           f"(policy={args.policy}, output_every={args.output_every}, "
@@ -152,6 +164,15 @@ def main(argv=None):
           f"bytes_staged={tot['bytes_staged']/1e6:.2f} MB; "
           f"lanes={tel['lanes']}")
     engine.close()
+    if ledger is not None:
+        verdict = ledger.verdict()
+        ledger.close()
+        lt = ledger.telemetry()
+        print(f"   ledger: {lt['flushes']} flushes, "
+              f"{lt['bytes_written']/1e3:.1f} kB, "
+              f"{lt['steps_attributed']} steps attributed, "
+              f"verdict={verdict} -> {args.out}/telemetry/ "
+              f"(python -m repro.launch.obs report {args.out})")
     if args.lane_pool:
         from ..insitu import shutdown_pool
         shutdown_pool()       # reclaim the resident lanes before exit

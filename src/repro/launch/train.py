@@ -64,6 +64,16 @@ def main(argv=None):
     p.add_argument("--insitu-trace-out", default=None, metavar="PATH",
                    help="record in-transit spans and write a Chrome-trace "
                         "JSON (Perfetto) when training finishes")
+    p.add_argument("--ledger", action="store_true",
+                   help="persist a run ledger (metrics/spans/events/"
+                        "attribution/health) into <insitu-dir or "
+                        "ckpt-dir>/telemetry/; inspect with "
+                        "python -m repro.launch.obs")
+    p.add_argument("--ledger-interval", type=float, default=2.0,
+                   help="seconds between background ledger flushes")
+    p.add_argument("--metrics-port", type=int, default=None, metavar="P",
+                   help="expose a Prometheus /metrics endpoint from the "
+                        "trainer process on this port (0 = ephemeral)")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
@@ -88,6 +98,8 @@ def main(argv=None):
         insitu_device_reduce=args.insitu_device_reduce,
         insitu_device_mesh=args.insitu_device_mesh,
         insitu_trace_out=args.insitu_trace_out,
+        ledger=args.ledger, ledger_interval=args.ledger_interval,
+        metrics_port=args.metrics_port,
         seed=args.seed)
     trainer.run(args.steps)
     return 0

@@ -1,21 +1,39 @@
-"""Observability substrate for the in-transit pipeline (DESIGN.md §15).
+"""Observability substrate for the in-transit pipeline (DESIGN.md §15, §19).
 
-Two stdlib-only pieces:
+Stdlib-only pieces:
 
   * :mod:`repro.obs.metrics` — counters / gauges / fixed-bucket
     histograms behind a :class:`MetricsRegistry`, with Prometheus text
     and JSON snapshot renderers.
   * :mod:`repro.obs.trace` — per-step span tracing with cross-process
     context propagation and Chrome-trace/Perfetto export.
+  * :mod:`repro.obs.events` — bounded typed event ring (the flight
+    recorder) with crash-dump hooks.
+  * :mod:`repro.obs.ledger` — persistent run ledger: periodic durable
+    flushes of metrics/spans/events/attribution/health into a
+    ``telemetry/`` Hercule database under the run root.
+  * :mod:`repro.obs.attrib` — per-step critical-path attribution.
+  * :mod:`repro.obs.health` — declarative threshold/burn-rate rules
+    with a run-end verdict.
+  * :mod:`repro.obs.httpd` — opt-in ``/metrics`` scrape endpoint for
+    processes without a catalog server.
 """
-from . import metrics, trace
+from . import attrib, events, health, httpd, ledger, metrics, trace
+from .attrib import Attributor, attribute
+from .events import EVENTS, EventRing
+from .health import HealthEngine, Rule, default_rules
+from .httpd import MetricsServer, serve_metrics
+from .ledger import LedgerReader, RunLedger
 from .metrics import (Counter, Gauge, Histogram, LATENCY_BUCKETS,
                       MetricsRegistry, REGISTRY, exponential_buckets,
                       set_enabled)
 from .trace import TRACER, Span, Tracer, now_us
 
 __all__ = [
-    "Counter", "Gauge", "Histogram", "LATENCY_BUCKETS",
-    "MetricsRegistry", "REGISTRY", "Span", "TRACER", "Tracer",
-    "exponential_buckets", "metrics", "now_us", "set_enabled", "trace",
+    "Attributor", "Counter", "EVENTS", "EventRing", "Gauge",
+    "HealthEngine", "Histogram", "LATENCY_BUCKETS", "LedgerReader",
+    "MetricsRegistry", "MetricsServer", "REGISTRY", "Rule", "RunLedger",
+    "Span", "TRACER", "Tracer", "attrib", "attribute", "default_rules",
+    "events", "exponential_buckets", "health", "httpd", "ledger",
+    "metrics", "now_us", "serve_metrics", "set_enabled", "trace",
 ]

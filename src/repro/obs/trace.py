@@ -20,6 +20,8 @@ the global ``TRACER`` for a run.
 """
 from __future__ import annotations
 
+import collections
+import itertools
 import json
 import os
 import threading
@@ -102,12 +104,30 @@ class _NoopSpan:
 _NOOP = _NoopSpan()
 
 
-class Tracer:
-    """Collects finished spans; thread-local stack gives implicit parents."""
+#: default retained-span window; a long ledger-instrumented run keeps
+#: only the newest spans in memory (older ones were already flushed to
+#: the run ledger, or weren't wanted at all)
+DEFAULT_MAX_SPANS = 100_000
 
-    def __init__(self, enabled: bool = False):
+
+class Tracer:
+    """Collects finished spans; thread-local stack gives implicit parents.
+
+    The span buffer is bounded (``max_spans``, a deque window): once a
+    run outgrows it the oldest spans fall off and ``spans_dropped``
+    counts them. ``write_chrome_trace``/``export`` keep their exact
+    semantics on the retained window; incremental consumers (the run
+    ledger) use :meth:`drain_since` marks and therefore see every span
+    as long as they drain faster than the window turns over.
+    """
+
+    def __init__(self, enabled: bool = False,
+                 max_spans: int = DEFAULT_MAX_SPANS):
         self.enabled = enabled
-        self._spans: list[dict] = []
+        self._max_spans = int(max_spans)
+        self._spans: collections.deque[dict] = \
+            collections.deque(maxlen=self._max_spans)
+        self._appended = 0          # lifetime spans, incl. fallen-off
         self._lock = threading.Lock()
         self._tls = threading.local()
 
@@ -121,6 +141,24 @@ class Tracer:
     def clear(self) -> None:
         with self._lock:
             self._spans.clear()
+            self._appended = 0
+
+    def set_max_spans(self, n: int) -> None:
+        """Resize the retained window (keeps the newest spans)."""
+        with self._lock:
+            self._max_spans = int(n)
+            self._spans = collections.deque(self._spans,
+                                            maxlen=self._max_spans)
+
+    @property
+    def max_spans(self) -> int:
+        return self._max_spans
+
+    @property
+    def spans_dropped(self) -> int:
+        """Spans that fell off the bounded window (lifetime count)."""
+        with self._lock:
+            return self._appended - len(self._spans)
 
     # ------------------------------------------------------------- spans
     def span(self, name: str, cat: str = "insitu", parent=None,
@@ -154,6 +192,7 @@ class Tracer:
         rec = span.as_dict()
         with self._lock:
             self._spans.append(rec)
+            self._appended += 1
         return rec
 
     def context(self) -> dict | None:
@@ -167,11 +206,32 @@ class Tracer:
             return
         with self._lock:
             self._spans.extend(spans)
+            self._appended += len(spans)
 
     # ----------------------------------------------------------- exports
     def spans(self) -> list[dict]:
         with self._lock:
             return list(self._spans)
+
+    def drain_since(self, mark: int) -> tuple[int, list[dict]]:
+        """Spans appended after ``mark``; returns ``(new_mark, spans)``.
+
+        ``mark`` is an opaque cursor (the lifetime append count from a
+        previous call; start at 0). Spans that both arrived and fell
+        off the bounded window between two drains are lost — they still
+        show in :attr:`spans_dropped`. A cursor ahead of the buffer
+        (e.g. after :meth:`clear`) resyncs to the full window.
+        """
+        with self._lock:
+            total = self._appended
+            if mark > total:      # buffer was cleared since that mark
+                mark = total - len(self._spans)
+            n_new = min(total - mark, len(self._spans))
+            if n_new <= 0:
+                return total, []
+            start = len(self._spans) - n_new
+            return total, list(itertools.islice(
+                self._spans, start, len(self._spans)))
 
     def export(self) -> dict:
         """Chrome-trace JSON object (load in chrome://tracing/Perfetto)."""
@@ -220,6 +280,7 @@ class Tracer:
                 pass
         with self._lock:
             self._spans.append(span.as_dict())
+            self._appended += 1
 
 
 def now_us() -> float:

@@ -64,7 +64,9 @@ class Trainer:
                  insitu_domains: int = 1, insitu_backend: str = "thread",
                  insitu_device_reduce: bool = False,
                  insitu_device_mesh: int = 0,
-                 insitu_trace_out: str | None = None):
+                 insitu_trace_out: str | None = None,
+                 ledger: bool = False, ledger_interval: float = 2.0,
+                 metrics_port: int | None = None):
         self.lm = lm
         self.cfg = lm.cfg
         self.opt_cfg = opt_cfg or optim.OptConfig()
@@ -111,6 +113,25 @@ class Trainer:
         if insitu_trace_out and self.insitu is not None:
             from ..obs import TRACER
             TRACER.enable()
+        self.ledger = None
+        if ledger:
+            # the run ledger lives with the run's analysis output when
+            # there is one, else beside the checkpoints
+            from ..obs import RunLedger, TRACER
+            TRACER.enable()
+            self.ledger = RunLedger(
+                insitu_dir if self.insitu is not None else ckpt_dir,
+                "trainer", interval=ledger_interval)
+            if self.insitu is not None:
+                self.insitu.bind_ledger(self.ledger)
+            if hasattr(self.ckpt, "bind_ledger"):
+                self.ckpt.bind_ledger(self.ledger)
+        self.metrics_server = None
+        if metrics_port is not None:
+            from ..obs import serve_metrics
+            self.metrics_server = serve_metrics(metrics_port)
+            print(f"metrics endpoint: {self.metrics_server.url}",
+                  flush=True)
         self.monitor = StragglerMonitor()
         self.seed = seed
         self._stop = False
@@ -187,6 +208,13 @@ class Trainer:
                 n = TRACER.write_chrome_trace(self.insitu_trace_out)
                 print(f"in-transit trace: {n} spans -> "
                       f"{self.insitu_trace_out}", flush=True)
+        if self.ledger is not None:
+            verdict = self.ledger.verdict()
+            self.ledger.close()
+            print(f"run ledger: {self.ledger.flushes} flushes, "
+                  f"verdict={verdict} -> {self.ledger.dir}", flush=True)
+        if self.metrics_server is not None:
+            self.metrics_server.close()
         return state
 
     def _dump_analysis(self, step: int, state):
